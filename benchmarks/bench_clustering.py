@@ -1,0 +1,106 @@
+"""Paper Table 2 (right): device-clustering time.
+
+HACCS clusters P(y)/P(X|y) summaries with DBSCAN; the paper replaces both
+the summary (smaller) and the algorithm (K-means).  We measure:
+
+    dbscan  over p_y / pxy / encoder summaries      (baseline pipeline)
+    kmeans  over encoder summaries                  (the paper's pipeline)
+
+at several client counts N, and report measured seconds + the fitted N²
+extrapolation to the paper's full scales (2 800 / 11 325 clients) for
+configurations that exceed container memory.
+
+CSV: pipeline,dataset,n_clients,seconds
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dbscan, kmeans
+
+
+def _synth_summaries(rs, n, dim, groups=8, sep=4.0):
+    """Summaries with latent group structure (as real clients exhibit)."""
+    centers = rs.normal(0, sep, (groups, dim)).astype(np.float32)
+    g = rs.randint(0, groups, n)
+    return (centers[g] + rs.normal(0, 1.0, (n, dim)).astype(np.float32)), g
+
+
+def _time(fn, *args, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return time.perf_counter() - t0, out
+
+
+def run(scales=((500, "femnist"), (2000, "openimage")),
+        dims=None, k_clusters: int = 10, seed: int = 0) -> list:
+    rs = np.random.RandomState(seed)
+    dims = dims or {
+        # summary dims at paper-like settings
+        "femnist": {"py": 62, "pxy": 62 * 196 * 8, "encoder": 62 * 64 + 62},
+        "openimage": {"py": 600, "pxy": 600 * 192 * 8,
+                      "encoder": 600 * 64 + 600},
+    }
+    rows = []
+    for n, dname in scales:
+        for sname, dim in dims[dname].items():
+            dim_capped = min(dim, 60_000)      # container memory guard
+            x_np, _ = _synth_summaries(rs, n, dim_capped)
+            x = jnp.asarray(x_np)
+            med = float(np.median(np.linalg.norm(
+                x_np - x_np.mean(0), axis=1)))
+            dt_db, res = _time(dbscan, x, med * 0.5, 4)
+            rows.append({"name": f"clustering/dbscan-{sname}/{dname}",
+                         "pipeline": f"dbscan-{sname}", "dataset": dname,
+                         "n": n, "dim": dim_capped, "seconds": dt_db,
+                         "clusters": int(res.num_clusters)})
+            if sname == "encoder":
+                dt_km, resk = _time(kmeans, x, k_clusters,
+                                    jax.random.PRNGKey(seed))
+                rows.append({"name": f"clustering/kmeans-encoder/{dname}",
+                             "pipeline": "kmeans-encoder", "dataset": dname,
+                             "n": n, "dim": dim_capped, "seconds": dt_km,
+                             "clusters": k_clusters})
+    return rows
+
+
+def main(fast: bool = True):
+    scales = ((300, "femnist"), (800, "openimage")) if fast else \
+        ((2800, "femnist"), (4000, "openimage"))
+    rows = run(scales=scales)
+    by = {}
+    for r in rows:
+        print(f"{r['name']},{r['seconds'] * 1e6:.0f},"
+              f"n={r['n']};dim={r['dim']};clusters={r['clusters']}")
+        by[(r["pipeline"], r["dataset"])] = r
+    for d in ("femnist", "openimage"):
+        a = by.get(("dbscan-pxy", d))
+        b = by.get(("kmeans-encoder", d))
+        if a and b:
+            print(f"clustering/speedup_dbscanpxy_over_kmeans/{d},0,"
+                  f"{a['seconds'] / max(b['seconds'], 1e-9):.1f}x")
+    # paper-scale extrapolation: DBSCAN is O(N²·D); K-means O(N·K·D·iters).
+    # Scale the measured times to the paper's client counts and the real
+    # (uncapped) P(X|y) summary dim, where the paper observed ">2 days".
+    a = by.get(("dbscan-pxy", "openimage"))
+    b = by.get(("kmeans-encoder", "openimage"))
+    if a and b:
+        n_full, d_pxy_full = 11_325, 600 * 192 * 8
+        t_db = a["seconds"] * (n_full / a["n"]) ** 2 * (d_pxy_full / a["dim"])
+        t_km = b["seconds"] * (n_full / b["n"])
+        print(f"clustering/extrapolated_dbscanpxy_full_s,0,{t_db:.0f}"
+              f" ({t_db / 3600:.1f}h; paper: >2 days)")
+        print(f"clustering/extrapolated_speedup_full,0,"
+              f"{t_db / max(t_km, 1e-9):.0f}x (paper: >=360x)")
+    return rows
+
+
+if __name__ == "__main__":
+    main(fast=False)

@@ -1,0 +1,93 @@
+"""Roofline table from dry-run records (results/dryrun*.jsonl).
+
+Prints, per (arch × shape × mesh): the three roofline terms, dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS ratio, bytes/device and HBM fit — the
+§Roofline deliverable rendered from the dry-run artifacts.
+
+CSV: dryrun/<arch>/<shape>/<mesh>,compile_us,terms
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_records(pattern: str = "results/dryrun*.jsonl") -> list:
+    recs = {}
+    for path in sorted(glob.glob(pattern)):
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    r = json.loads(line)
+                except json.JSONDecodeError:
+                    continue
+                key = (r.get("arch"), r.get("shape"), r.get("mesh"),
+                       r.get("rules", "baseline"), r.get("tag", ""))
+                recs[key] = r          # latest wins
+    return list(recs.values())
+
+
+def markdown_table(recs: list) -> str:
+    hdr = ("| arch | shape | mesh | t_comp(s) | t_mem(s) | t_mem_fused(s) | "
+           "t_coll(s) | dominant | useful | GB/dev | fits |")
+    sep = "|" + "---|" * 11
+    lines = [hdr, sep]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    for r in sorted(recs, key=lambda r: (r["arch"], order.get(r["shape"], 9),
+                                         r["mesh"])):
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — "
+                         f"| — | — | skipped | — | — | — |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — "
+                         f"| — | — | {r.get('status')} | — | — | — |")
+            continue
+        rl = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {rl['t_compute_s']:.3g} | {rl['t_memory_s']:.3g} "
+            f"| {rl.get('t_memory_fused_s', rl['t_memory_s']):.3g} "
+            f"| {rl['t_collective_s']:.3g} | {rl['dominant']} "
+            f"| {rl['useful_ratio']:.2f} "
+            f"| {r['bytes_per_device'] / 2**30:.1f} "
+            f"| {'y' if rl['fits_hbm'] else 'N'} |")
+    return "\n".join(lines)
+
+
+def main(fast: bool = True):
+    recs = load_records()
+    if not recs:
+        print("dryrun/none,0,run `python -m repro.launch.dryrun --all` first")
+        return []
+    ok = [r for r in recs if r.get("status") == "ok"]
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        rl = r["roofline"]
+        print(f"dryrun/{r['arch']}/{r['shape']}/{r['mesh']},"
+              f"{r.get('compile_s', 0) * 1e6:.0f},"
+              f"dom={rl['dominant']};tc={rl['t_compute_s']:.3g};"
+              f"tm={rl['t_memory_s']:.3g};tx={rl['t_collective_s']:.3g};"
+              f"useful={rl['useful_ratio']:.2f}")
+    # serving throughput: decode step bound-time -> tokens/s per chip
+    for r in ok:
+        if r["shape"] in ("decode_32k", "long_500k") and not r.get("tag"):
+            rl = r["roofline"]
+            bound = max(rl["t_compute_s"], rl["t_memory_s"],
+                        rl["t_collective_s"])
+            batch = 128 if r["shape"] == "decode_32k" else 1
+            tps = batch / max(bound, 1e-12) / rl["chips"]
+            print(f"dryrun/tokens_per_s_per_chip/{r['arch']}/{r['shape']}"
+                  f"/{r['mesh']},0,{tps:.3g}")
+    skipped = [r for r in recs if r.get("status") == "skipped"]
+    errors = [r for r in recs if r.get("status") not in ("ok", "skipped")]
+    print(f"dryrun/summary,0,ok={len(ok)};skipped={len(skipped)};"
+          f"errors={len(errors)}")
+    return recs
+
+
+if __name__ == "__main__":
+    print(markdown_table(load_records()))

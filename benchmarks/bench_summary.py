@@ -1,0 +1,113 @@
+"""Paper Table 2 (left): per-client distribution-summary time.
+
+Times the three summary methods on synthetic datasets shaped like the
+paper's Table 1 (FEMNIST-like 28×28×1/62 classes; OpenImage-like
+256×256×3/600 classes).  P(X|y) histograms operate on spatially pooled
+features (`pool`) so the baseline fits in container memory — the paper's
+>64 GB observation is exactly this term at full resolution; we report the
+measured time plus the dimensional extrapolation.
+
+CSV: method,dataset,avg_s,max_s,summary_dim
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import DatasetSpec, FederatedDataset
+from repro.fl.client import timed_summary
+from repro.models.cnn import CNNConfig, build_cnn, cnn_apply
+
+
+def _pool(feats: np.ndarray, factor: int) -> np.ndarray:
+    if factor <= 1:
+        return feats
+    n, h, w, c = feats.shape
+    h2, w2 = h // factor, w // factor
+    return feats[:, :h2 * factor, :w2 * factor].reshape(
+        n, h2, factor, w2, factor, c).mean((2, 4))
+
+
+def run(num_clients: int = 8, openimage_side: int = 64,
+        openimage_clients: int = 11325, coreset_k: int = 128,
+        encoder_dim: int = 64, bins: int = 16, pool: int = 2,
+        use_kernel: bool = False, seed: int = 0) -> list:
+    specs = {
+        "femnist": DatasetSpec("femnist-like", 2800, 62, (28, 28, 1),
+                               avg_samples=109, max_samples=512),
+        # feature side scaled (full 256 documented as extrapolation)
+        "openimage": DatasetSpec("openimage-like", openimage_clients, 600,
+                                 (openimage_side, openimage_side, 3),
+                                 avg_samples=228, max_samples=465),
+    }
+    rows = []
+    for dname, spec in specs.items():
+        data = FederatedDataset(spec, seed=seed)
+        enc_cfg = CNNConfig(in_channels=spec.feature_shape[-1],
+                            feature_dim=encoder_dim)
+        enc_params = build_cnn(enc_cfg)
+        enc_fn = jax.jit(lambda x: cnn_apply(enc_params, x))
+        # pick clients spanning small->large datasets
+        order = np.argsort(data.sizes)
+        cids = order[np.linspace(0, len(order) - 1, num_clients).astype(int)]
+        for method in ("py", "pxy", "encoder"):
+            times = []
+            dim = 0
+            for i, cid in enumerate(cids):
+                feats, labels, valid = data.client_data(int(cid))
+                if method == "pxy":
+                    feats = _pool(feats, pool)
+                s, _, dt = timed_summary(
+                    method, feats, labels, valid, spec.num_classes,
+                    encoder_fn=enc_fn, coreset_k=coreset_k, bins=bins,
+                    key=jax.random.PRNGKey(int(cid)),
+                    use_kernel=use_kernel)
+                if i > 0:            # drop jit-warmup client
+                    times.append(dt)
+                dim = s.size
+            rows.append({
+                "name": f"summary/{method}/{dname}",
+                "method": method, "dataset": dname,
+                "avg_s": float(np.mean(times)), "max_s": float(np.max(times)),
+                "summary_dim": int(dim),
+            })
+    return rows
+
+
+def main(fast: bool = True):
+    rows = run(num_clients=5 if fast else 10,
+               openimage_side=32 if fast else 64,
+               openimage_clients=2000 if fast else 11325)
+    der = {}
+    for r in rows:
+        print(f"{r['name']},{r['avg_s'] * 1e6:.0f},"
+              f"max_s={r['max_s']:.4f};dim={r['summary_dim']}")
+        der[(r["method"], r["dataset"])] = r
+    for d in ("femnist", "openimage"):
+        if ("pxy", d) in der and ("encoder", d) in der:
+            sp = der[("pxy", d)]["max_s"] / max(der[("encoder", d)]["max_s"], 1e-9)
+            print(f"summary/speedup_pxy_over_encoder/{d},0,{sp:.1f}x")
+    # paper-scale extrapolation: P(X|y) cost grows linearly in the raw
+    # feature dim D (histogram over every dim); the encoder summary is
+    # ~constant in D (coreset + fixed CNN).  Fit t = a·D from the two
+    # measured scales and evaluate at the paper's full resolutions.
+    if ("pxy", "openimage") in der:
+        r = der[("pxy", "openimage")]
+        # summary_dim = C * D * B  ->  feature dims D actually histogrammed
+        d_measured = r["summary_dim"] / (600 * 16)
+        t_per_dim = r["max_s"] / max(d_measured, 1)
+        d_full = 3 * 256 * 256                       # paper's 3x256x256
+        t_full = t_per_dim * d_full
+        enc = der[("encoder", "openimage")]["max_s"]
+        print(f"summary/extrapolated_pxy_fullres_s,0,{t_full:.1f}")
+        print(f"summary/extrapolated_speedup_fullres,0,"
+              f"{t_full / max(enc, 1e-9):.0f}x"
+              f" (linear-in-D fit; paper measured ~30x on mobile hardware)")
+    return rows
+
+
+if __name__ == "__main__":
+    main(fast=False)

@@ -1,0 +1,62 @@
+"""§Perf — summary-pipeline hillclimb (the paper's own hot loop, measured
+for real on this host):
+
+  iteration 1: eager per-client summary (baseline; retraces every client)
+               -> jitted + power-of-two size bucketing (compile once per
+               bucket, reuse across the federation and across refresh rounds)
+
+CSV: pipeline/<method>/<variant>,us_per_call,speedup
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from repro.data.synthetic import DatasetSpec, FederatedDataset
+from repro.fl.client import timed_summary
+from repro.models.cnn import CNNConfig, build_cnn, cnn_apply
+
+
+def run(num_clients: int = 12, seed: int = 0) -> list:
+    spec = DatasetSpec("femnist-like", 2800, 62, (28, 28, 1),
+                       avg_samples=109, max_samples=512)
+    data = FederatedDataset(spec, seed=seed)
+    enc_params = build_cnn(CNNConfig(in_channels=1, feature_dim=64))
+    enc_fn = jax.jit(lambda x: cnn_apply(enc_params, x))
+    order = np.argsort(data.sizes)
+    cids = order[np.linspace(0, len(order) - 1, num_clients).astype(int)]
+
+    rows = []
+    for method in ("py", "pxy", "encoder"):
+        for variant, jit in (("eager", False), ("jit+bucket", True)):
+            times = []
+            for i, cid in enumerate(cids):
+                feats, labels, valid = data.client_data(int(cid))
+                _, _, dt = timed_summary(
+                    method, feats, labels, valid, spec.num_classes,
+                    encoder_fn=enc_fn, coreset_k=128, bins=16,
+                    key=jax.random.PRNGKey(int(cid)), jit=jit)
+                if i > 0:
+                    times.append(dt)
+            rows.append({"name": f"pipeline/{method}/{variant}",
+                         "method": method, "variant": variant,
+                         "avg_s": float(np.mean(times))})
+    return rows
+
+
+def main(fast: bool = True):
+    rows = run(num_clients=6 if fast else 16)
+    by = {}
+    for r in rows:
+        by[(r["method"], r["variant"])] = r["avg_s"]
+        print(f"{r['name']},{r['avg_s'] * 1e6:.0f},")
+    for m in ("py", "pxy", "encoder"):
+        if (m, "eager") in by and (m, "jit+bucket") in by:
+            sp = by[(m, "eager")] / max(by[(m, "jit+bucket")], 1e-9)
+            print(f"pipeline/{m}/speedup,0,{sp:.1f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    main(fast=False)

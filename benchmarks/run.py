@@ -1,0 +1,70 @@
+"""Benchmark harness — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Prints ``name,us_per_call,derived`` CSV lines:
+  * bench_summary     — paper Table 2 (left): summary computation time
+  * bench_clustering  — paper Table 2 (right): device clustering time
+  * bench_selection   — paper §2 / HACCS: time-to-accuracy of selection
+  * bench_kernels     — Pallas kernel hot spots vs oracles
+  * bench_dryrun      — §Roofline table from dry-run artifacts (if present)
+
+Default sizes are CPU-budget-friendly; --full uses paper-scale settings.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    bench_clustering,
+    bench_compression,
+    bench_dryrun,
+    bench_kernels,
+    bench_selection,
+    bench_summary,
+    bench_summary_pipeline,
+)
+
+BENCHES = (
+    ("summary", bench_summary.main),
+    ("clustering", bench_clustering.main),
+    ("selection", bench_selection.main),
+    ("kernels", bench_kernels.main),
+    ("pipeline", bench_summary_pipeline.main),
+    ("compression", bench_compression.main),
+    ("dryrun", bench_dryrun.main),
+)
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--full", action="store_true",
+                   help="paper-scale sizes (slow)")
+    p.add_argument("--only", default="",
+                   help="comma-separated bench names to run")
+    args = p.parse_args(argv)
+    only = set(filter(None, args.only.split(",")))
+
+    print("name,us_per_call,derived")
+    failures = []
+    for name, fn in BENCHES:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        print(f"# --- {name} ---", flush=True)
+        try:
+            fn(fast=not args.full)
+        except Exception:  # noqa: BLE001 — keep the harness running
+            failures.append(name)
+            traceback.print_exc()
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    if failures:
+        print(f"# FAILED: {','.join(failures)}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""End-to-end federated training with the paper's efficient summaries.
+
+    PYTHONPATH=src python examples/fl_train.py [--rounds 20] [--clients 60]
+
+Runs three selection policies on the same drifting non-IID federation and
+prints accuracy-vs-simulated-wallclock — the paper's headline effect:
+cluster-aware selection with cheap refreshable summaries reaches target
+accuracy in less simulated time, and the summary overhead stays negligible
+even under drift (where HACCS's one-shot P(X|y) summaries would either go
+stale or cost 100s of seconds per refresh).
+"""
+import argparse
+
+import numpy as np
+
+from repro.data.synthetic import FederatedDataset, small_spec
+from repro.fl import FLConfig, run_federated
+from repro.fl.system import SystemSpec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=16)
+    ap.add_argument("--clients", type=int, default=48)
+    ap.add_argument("--drift-start", type=int, default=8)
+    args = ap.parse_args()
+
+    data = FederatedDataset(small_spec(
+        num_clients=args.clients, num_classes=8, side=10, avg_samples=48,
+        num_styles=4), seed=0)
+    system = SystemSpec(speed_sigma=1.0, availability=0.85)
+
+    runs = {
+        "haccs+encoder": FLConfig(rounds=args.rounds, clients_per_round=8,
+                                  local_steps=8, summary="encoder",
+                                  selection="haccs", num_clusters=6,
+                                  coreset_k=32, recluster_every=4,
+                                  drift_start=args.drift_start,
+                                  drift_per_round=0.15, refresh_kl=0.08),
+        "random": FLConfig(rounds=args.rounds, clients_per_round=8,
+                           local_steps=8, summary="none", selection="random",
+                           drift_start=args.drift_start,
+                           drift_per_round=0.15),
+        "fastest-only": FLConfig(rounds=args.rounds, clients_per_round=8,
+                                 local_steps=8, summary="none",
+                                 selection="fastest",
+                                 drift_start=args.drift_start,
+                                 drift_per_round=0.15),
+    }
+    results = {}
+    for name, cfg in runs.items():
+        h = run_federated(data, cfg, system)
+        results[name] = h
+        print(f"\n=== {name}")
+        for r in range(0, args.rounds, max(args.rounds // 8, 1)):
+            print(f"  round {r:3d}  acc {h['acc'][r]:.3f}  "
+                  f"sim_time {h['sim_time'][r]:8.1f}  "
+                  f"refreshes {h['refreshes'][r]}")
+        print(f"  final acc {h['final_acc']:.3f}  "
+              f"total sim time {h['sim_time'][-1]:.1f}  "
+              f"summary wall {sum(h['wall_summary_s']):.1f}s")
+
+    base = results["random"]
+    ours = results["haccs+encoder"]
+    tgt = 0.8 * max(base["final_acc"], ours["final_acc"])
+    t_of = lambda h: next((t for a, t in zip(h["acc"], h["sim_time"])  # noqa
+                           if a >= tgt), float("inf"))
+    if np.isfinite(t_of(ours)) and np.isfinite(t_of(base)):
+        print(f"\ntime-to-{tgt:.2f}-accuracy: haccs {t_of(ours):.1f} vs "
+              f"random {t_of(base):.1f} "
+              f"({(1 - t_of(ours) / t_of(base)) * 100:.0f}% reduction)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from repro.checkpoint.checkpoint import (  # noqa: F401
+    load_checkpoint,
+    restore_like,
+    save_checkpoint,
+)

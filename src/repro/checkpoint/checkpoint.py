@@ -1,0 +1,53 @@
+"""npz-based checkpointing, sharding-aware.
+
+Arrays are gathered to host (works for sharded jax.Arrays), saved flat with
+`/`-joined keys, and restored against a reference pytree structure; the
+caller re-shards via device_put with the launch layer's shardings.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+from repro.utils.tree import flatten_dict, unflatten_dict
+
+
+def save_checkpoint(path: str, params, step: int = 0, extra: dict | None = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = flatten_dict(params)
+    arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+    np.savez(path if path.endswith(".npz") else path + ".npz", **arrays)
+    meta = {"step": int(step), "keys": sorted(arrays),
+            "extra": extra or {}}
+    with open(_meta_path(path), "w") as f:
+        json.dump(meta, f)
+
+
+def _meta_path(path: str) -> str:
+    base = path[:-4] if path.endswith(".npz") else path
+    return base + ".meta.json"
+
+
+def load_checkpoint(path: str):
+    """Returns (params_nested_dict, meta)."""
+    npz = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat = {k: npz[k] for k in npz.files}
+    with open(_meta_path(path)) as f:
+        meta = json.load(f)
+    return unflatten_dict(flat), meta
+
+
+def restore_like(reference, loaded) -> object:
+    """Cast/verify a loaded nested dict against a reference pytree."""
+    ref_leaves, treedef = jax.tree.flatten(reference)
+    got_leaves = jax.tree.leaves(loaded)
+    if len(ref_leaves) != len(got_leaves):
+        raise ValueError(
+            f"checkpoint mismatch: {len(got_leaves)} leaves vs "
+            f"{len(ref_leaves)} expected")
+    cast = [np.asarray(g, dtype=r.dtype).reshape(r.shape)
+            for r, g in zip(ref_leaves, got_leaves)]
+    return jax.tree.unflatten(treedef, cast)

@@ -1,0 +1,36 @@
+"""Architecture registry — importing this package registers all configs."""
+from repro.configs.base import (  # noqa: F401
+    INPUT_SHAPES,
+    InputShape,
+    ModelConfig,
+    get_config,
+    list_archs,
+    register,
+)
+
+# Assigned architectures (importing registers them).
+from repro.configs import (  # noqa: F401
+    llama4_scout_17b_a16e,
+    moonshot_v1_16b_a3b,
+    llama32_vision_90b,
+    hymba_1_5b,
+    phi4_mini_3_8b,
+    deepseek_v3_671b,
+    whisper_large_v3,
+    deepseek_coder_33b,
+    gemma3_1b,
+    xlstm_350m,
+)
+
+ASSIGNED_ARCHS = (
+    "llama4-scout-17b-a16e",
+    "moonshot-v1-16b-a3b",
+    "llama-3.2-vision-90b",
+    "hymba-1.5b",
+    "phi4-mini-3.8b",
+    "deepseek-v3-671b",
+    "whisper-large-v3",
+    "deepseek-coder-33b",
+    "gemma3-1b",
+    "xlstm-350m",
+)

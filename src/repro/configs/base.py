@@ -1,0 +1,184 @@
+"""Config system: one immutable dataclass describes any architecture in the
+zoo; a registry maps ``--arch <id>`` to its config; ``reduced()`` derives the
+CPU-smoke-test variant of the same family (≤2 layers, d_model ≤ 512,
+≤4 experts) required by the task."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    source: str                      # citation for the assigned config
+    num_layers: int = 2
+    d_model: int = 256
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    d_ff: int = 512
+    vocab_size: int = 1024
+    head_dim: int = 0                # 0 -> d_model // num_heads
+
+    # --- attention variants ---
+    attention: str = "gqa"           # gqa | mla | none (pure ssm)
+    window_size: int = 0             # 0 = full attention
+    window_pattern: int = 0          # p = (p-1) local : 1 global; 0 = uniform window
+    global_layers: tuple = ()        # explicit full-attention layer indices
+    rope_theta: float = 10_000.0
+    # MLA (DeepSeek-V3)
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_rope_head_dim: int = 64
+    qk_nope_head_dim: int = 128
+    v_head_dim: int = 128
+
+    # --- MoE ---
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    num_shared_experts: int = 0
+    moe_d_ff: int = 0                # per-expert hidden dim (0 -> d_ff)
+    moe_layer_period: int = 1        # every p-th layer is MoE
+    first_k_dense: int = 0           # DeepSeek-style leading dense layers
+    dense_d_ff: int = 0              # d_ff for those dense layers (0 -> d_ff)
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.001
+
+    # --- SSM / hybrid ---
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    slstm_every: int = 0             # xLSTM: every p-th layer is sLSTM
+
+    # --- structure ---
+    block_type: str = "transformer"  # transformer | hybrid | xlstm
+    mtp: bool = False                # DeepSeek-V3 multi-token-prediction head
+    mtp_weight: float = 0.3
+    cross_attn_period: int = 0       # VLM: every p-th layer gets cross-attn
+    encoder_layers: int = 0          # enc-dec (whisper)
+    frontend: str = "none"           # none | audio_frames | vision_patches
+    num_frontend_tokens: int = 0
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-6
+
+    # --- numerics / perf ---
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    remat: str = "none"              # none | block  (activation checkpointing)
+    banded_attention: bool = False   # §Perf: skip out-of-window KV blocks
+    opt_state_dtype: str = "float32"  # §Perf: bf16 AdamW moments option
+    quant_experts: bool = False      # §Perf: int8 expert weights (serving)
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def resolved_moe_d_ff(self) -> int:
+        return self.moe_d_ff or self.d_ff
+
+    @property
+    def resolved_dense_d_ff(self) -> int:
+        return self.dense_d_ff or self.d_ff
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for the 524288-token decode shape."""
+        if self.block_type in ("xlstm",):
+            return True
+        if self.block_type == "hybrid":
+            return True
+        return self.window_size > 0
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def reduced(self) -> "ModelConfig":
+        """Smoke-test variant: same family/block structure, tiny dims."""
+        d_model = min(self.d_model, 256)
+        heads = min(self.num_heads, 4)
+        kv = min(self.num_kv_heads, heads)
+        layers = min(self.num_layers, 2)
+        kw = dict(
+            name=self.name + "-smoke",
+            num_layers=layers,
+            d_model=d_model,
+            num_heads=heads,
+            num_kv_heads=kv,
+            head_dim=min(self.resolved_head_dim, 64),
+            d_ff=min(self.d_ff or 256, 512),
+            vocab_size=min(self.vocab_size, 512),
+            num_frontend_tokens=min(self.num_frontend_tokens, 16) if self.num_frontend_tokens else 0,
+            encoder_layers=min(self.encoder_layers, 2),
+        )
+        if self.num_experts:
+            kw.update(
+                num_experts=min(self.num_experts, 4),
+                num_experts_per_tok=min(self.num_experts_per_tok, 2),
+                num_shared_experts=min(self.num_shared_experts, 1),
+                moe_d_ff=min(self.resolved_moe_d_ff, 256),
+                first_k_dense=min(self.first_k_dense, 1),
+                dense_d_ff=min(self.resolved_dense_d_ff, 256),
+            )
+        if self.attention == "mla":
+            kw.update(q_lora_rank=min(self.q_lora_rank, 64),
+                      kv_lora_rank=min(self.kv_lora_rank, 32),
+                      qk_rope_head_dim=16, qk_nope_head_dim=32, v_head_dim=32)
+        if self.window_size:
+            kw.update(window_size=min(self.window_size, 64))
+        if self.global_layers:
+            kw.update(global_layers=tuple(i for i in self.global_layers if i < layers) or (0,))
+        if self.ssm_state:
+            kw.update(ssm_state=min(self.ssm_state, 8))
+        return self.replace(**kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    kind: str        # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+INPUT_SHAPES: dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", "train", 4_096, 256),
+    "prefill_32k": InputShape("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": InputShape("decode_32k", "decode", 32_768, 128),
+    "long_500k": InputShape("long_500k", "decode", 524_288, 1),
+}
+
+# ---------------------------------------------------------------------------
+_REGISTRY: dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register(name: str):
+    def deco(fn: Callable[[], ModelConfig]):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_config(name: str) -> ModelConfig:
+    # import the per-arch modules lazily so `configs` has no import cycle
+    from repro import configs as _pkg  # noqa: F401  (triggers registration)
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]()
+
+
+def list_archs() -> list[str]:
+    from repro import configs as _pkg  # noqa: F401
+    return sorted(_REGISTRY)

@@ -1,0 +1,20 @@
+"""DeepSeek-Coder 33B. [arXiv:2401.14196] — llama-architecture dense."""
+from repro.configs.base import ModelConfig, register
+
+
+@register("deepseek-coder-33b")
+def deepseek_coder() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-coder-33b",
+        family="dense",
+        source="arXiv:2401.14196",
+        num_layers=62,
+        d_model=7168,
+        num_heads=56,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=19_200,
+        vocab_size=32_256,
+        rope_theta=100_000.0,
+        tie_embeddings=False,
+    )

@@ -1,0 +1,37 @@
+"""DeepSeek-V3 671B. [arXiv:2412.19437]
+
+MLA (multi-head latent attention, latent KV cache), 1 shared + 256 routed
+experts with top-8 routing, first 3 layers dense (d_ff 18432), expert hidden
+dim 2048.  The MTP head is available as an auxiliary loss in the trainer."""
+from repro.configs.base import ModelConfig, register
+
+
+@register("deepseek-v3-671b")
+def deepseek_v3() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v3-671b",
+        family="moe",
+        source="arXiv:2412.19437",
+        num_layers=61,
+        d_model=7168,
+        num_heads=128,
+        num_kv_heads=128,          # MLA: kv heads == heads, cache is latent
+        d_ff=2048,
+        vocab_size=129_280,
+        attention="mla",
+        q_lora_rank=1536,
+        kv_lora_rank=512,
+        qk_rope_head_dim=64,
+        qk_nope_head_dim=128,
+        v_head_dim=128,
+        num_experts=256,
+        num_experts_per_tok=8,
+        num_shared_experts=1,
+        moe_d_ff=2048,
+        moe_layer_period=1,
+        first_k_dense=3,
+        dense_d_ff=18_432,
+        mtp=True,                  # depth-1 multi-token prediction head
+        rope_theta=10_000.0,
+        tie_embeddings=False,
+    )

@@ -1,0 +1,26 @@
+"""Gemma-3 1B. [hf:google/gemma-3-1b-pt]
+
+5 local (sliding-window 512) : 1 global attention pattern, 128k-native —
+the window pattern makes the 524k decode shape feasible (only the global
+layers keep a full-length KV cache)."""
+from repro.configs.base import ModelConfig, register
+
+
+@register("gemma3-1b")
+def gemma3() -> ModelConfig:
+    return ModelConfig(
+        name="gemma3-1b",
+        family="dense",
+        source="hf:google/gemma-3-1b-pt",
+        num_layers=26,
+        d_model=1152,
+        num_heads=4,
+        num_kv_heads=1,
+        head_dim=256,
+        d_ff=6912,
+        vocab_size=262_144,
+        window_size=512,
+        window_pattern=6,          # 5 local : 1 global
+        rope_theta=1_000_000.0,
+        tie_embeddings=True,
+    )

@@ -1,0 +1,30 @@
+"""Hymba 1.5B. [arXiv:2411.13676]
+
+Hybrid-head architecture: every block runs attention heads and Mamba
+(SSM) heads *in parallel* on the same input and fuses their outputs.
+Sliding-window attention (1024) on most layers, full attention on the
+first / middle / last layers, exactly as in the paper.  Sub-quadratic →
+eligible for long_500k decode."""
+from repro.configs.base import ModelConfig, register
+
+
+@register("hymba-1.5b")
+def hymba() -> ModelConfig:
+    return ModelConfig(
+        name="hymba-1.5b",
+        family="hybrid",
+        source="arXiv:2411.13676",
+        block_type="hybrid",
+        num_layers=32,
+        d_model=1600,
+        num_heads=25,
+        num_kv_heads=5,
+        head_dim=64,
+        d_ff=5504,
+        vocab_size=32_001,
+        ssm_state=16,
+        ssm_conv=4,
+        window_size=1024,
+        global_layers=(0, 15, 31),   # full-attention layers (first/middle/last)
+        rope_theta=10_000.0,
+    )

@@ -1,0 +1,27 @@
+"""Llama-3.2 Vision 90B backbone. [hf:meta-llama/Llama-3.2-11B-Vision]
+
+100 decoder layers = 20 groups of (4 self-attn + 1 cross-attn); the vision
+tower (ViT + projector) is a stub per the task carve-out — `input_specs`
+supplies precomputed patch embeddings of shape (batch, patches, d_model)."""
+from repro.configs.base import ModelConfig, register
+
+
+@register("llama-3.2-vision-90b")
+def llama32_vision() -> ModelConfig:
+    return ModelConfig(
+        name="llama-3.2-vision-90b",
+        family="vlm",
+        source="hf:meta-llama/Llama-3.2-11B-Vision (90B scale-up)",
+        num_layers=100,
+        d_model=8192,
+        num_heads=64,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=28_672,
+        vocab_size=128_256,
+        cross_attn_period=5,         # every 5th layer is cross-attention
+        frontend="vision_patches",
+        num_frontend_tokens=1024,    # precomputed patch embeddings
+        rope_theta=500_000.0,
+        tie_embeddings=False,
+    )

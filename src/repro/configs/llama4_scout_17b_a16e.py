@@ -1,0 +1,31 @@
+"""Llama-4 Scout 17B-active / 16-expert. [hf:meta-llama/Llama-4-Scout-17B-16E]
+
+MoE with 16 experts, top-1 routing, interleaved every other layer; chunked
+local attention (3 local : 1 global, chunk 8192) à la Llama-4 — which makes
+this arch eligible for the 524k-token decode shape."""
+from repro.configs.base import ModelConfig, register
+
+
+@register("llama4-scout-17b-a16e")
+def llama4_scout() -> ModelConfig:
+    return ModelConfig(
+        name="llama4-scout-17b-a16e",
+        family="moe",
+        source="hf:meta-llama/Llama-4-Scout-17B-16E",
+        num_layers=48,
+        d_model=5120,
+        num_heads=40,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=8192,
+        vocab_size=202_048,
+        num_experts=16,
+        num_experts_per_tok=1,
+        num_shared_experts=1,      # Llama-4 routes top-1 + a shared expert
+        moe_d_ff=8192,
+        moe_layer_period=1,        # Scout: every layer MoE (Maverick interleaves)
+        window_size=8192,          # chunked local attention
+        window_pattern=4,          # 3 local : 1 global
+        rope_theta=500_000.0,
+        tie_embeddings=False,
+    )

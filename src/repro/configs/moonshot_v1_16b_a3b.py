@@ -1,0 +1,30 @@
+"""Moonlight 16B-A3B (Moonshot). [hf:moonshotai/Moonlight-16B-A3B]
+
+DeepSeek-V2/V3-style fine-grained MoE: 64 routed experts, top-6, plus
+2 shared experts; expert hidden dim 1408.  Full attention (GQA kv=16)."""
+from repro.configs.base import ModelConfig, register
+
+
+@register("moonshot-v1-16b-a3b")
+def moonshot() -> ModelConfig:
+    return ModelConfig(
+        name="moonshot-v1-16b-a3b",
+        family="moe",
+        source="hf:moonshotai/Moonlight-16B-A3B",
+        num_layers=48,
+        d_model=2048,
+        num_heads=16,
+        num_kv_heads=16,
+        head_dim=128,
+        d_ff=1408,
+        vocab_size=163_840,
+        num_experts=64,
+        num_experts_per_tok=6,
+        num_shared_experts=2,
+        moe_d_ff=1408,
+        moe_layer_period=1,
+        first_k_dense=1,           # Moonlight keeps the first layer dense
+        dense_d_ff=11_264,
+        rope_theta=50_000.0,
+        tie_embeddings=False,
+    )

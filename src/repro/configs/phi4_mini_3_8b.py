@@ -1,0 +1,22 @@
+"""Phi-4-mini 3.8B. [arXiv:2412.08905]
+
+Plain dense decoder: RoPE + SwiGLU + GQA, full attention."""
+from repro.configs.base import ModelConfig, register
+
+
+@register("phi4-mini-3.8b")
+def phi4_mini() -> ModelConfig:
+    return ModelConfig(
+        name="phi4-mini-3.8b",
+        family="dense",
+        source="arXiv:2412.08905",
+        num_layers=32,
+        d_model=3072,
+        num_heads=24,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=8192,
+        vocab_size=200_064,
+        rope_theta=10_000.0,
+        tie_embeddings=True,
+    )

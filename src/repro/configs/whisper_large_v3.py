@@ -1,0 +1,28 @@
+"""Whisper large-v3 backbone. [arXiv:2212.04356]
+
+Encoder-decoder transformer.  The mel-spectrogram + conv frontend is a stub
+per the task carve-out: `input_specs` supplies 1500 precomputed frame
+embeddings of shape (batch, frames, d_model).  Decode shapes lower the
+decoder's serve_step with self- and cross-attention caches."""
+from repro.configs.base import ModelConfig, register
+
+
+@register("whisper-large-v3")
+def whisper() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-large-v3",
+        family="audio",
+        source="arXiv:2212.04356",
+        num_layers=32,             # decoder layers
+        encoder_layers=32,
+        d_model=1280,
+        num_heads=20,
+        num_kv_heads=20,
+        head_dim=64,
+        d_ff=5120,
+        vocab_size=51_866,
+        frontend="audio_frames",
+        num_frontend_tokens=1500,
+        rope_theta=10_000.0,       # we use RoPE in place of learned pos-emb
+        tie_embeddings=True,
+    )

@@ -1,0 +1,27 @@
+"""xLSTM 350M. [arXiv:2405.04517]
+
+Recurrent architecture: mLSTM (matrix-memory, fully parallelizable) blocks
+with sLSTM (scalar-memory) blocks every 8th layer (the paper's [7:1] ratio).
+d_ff=0 — the blocks carry their own up/down projections.  O(1) state per
+token → runs the 524k decode shape."""
+from repro.configs.base import ModelConfig, register
+
+
+@register("xlstm-350m")
+def xlstm() -> ModelConfig:
+    return ModelConfig(
+        name="xlstm-350m",
+        family="ssm",
+        source="arXiv:2405.04517",
+        block_type="xlstm",
+        attention="none",
+        num_layers=24,
+        d_model=1024,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=0,
+        vocab_size=50_304,
+        ssm_expand=2,
+        slstm_every=8,
+        tie_embeddings=True,
+    )

@@ -1,0 +1,13 @@
+from repro.core.coreset import class_quotas, coreset_indices  # noqa: F401
+from repro.core.dbscan import DBSCANResult, dbscan  # noqa: F401
+from repro.core.kmeans import KMeansResult, kmeans, pairwise_sq_dist  # noqa: F401
+from repro.core.scheduler import RefreshPolicy, SummaryRegistry, sym_kl  # noqa: F401
+from repro.core.selection import SelectionConfig, cluster_quotas, select_devices  # noqa: F401
+from repro.core.summary import (  # noqa: F401
+    encoder_summary,
+    label_distribution,
+    per_label_mean,
+    pxy_histogram,
+    quantize,
+    summary_sizes,
+)

@@ -1,0 +1,88 @@
+"""Summary compression — the paper's stated future work (§5):
+
+    "we plan to explore additional dimension reduction methods to more
+     effectively compress the data summary while maintaining the integrity
+     of statistical diversity information."
+
+Three compressors over the C·H+C summary vectors, all jit-friendly:
+
+  * ``jl_project``      — Johnson–Lindenstrauss random projection (the
+                          alternative the paper explicitly contrasts with
+                          the encoder; here applied to the *summary*, where
+                          its data-independence is a feature: server and
+                          clients share the projection by seed, so the
+                          compressed summary is what travels the network);
+  * ``pca_project``     — top-k PCA via subspace (power) iteration on the
+                          server's summary matrix — data-dependent, tighter;
+  * ``quantize_summary``— int8 affine quantization (per-vector scale),
+                          composable with either projection.
+
+`benchmarks/bench_compression.py` measures clustering quality (group
+purity) vs compressed size — the bandwidth/quality trade-off the paper
+cares about for large-scale FL.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def jl_project(x, out_dim: int, key):
+    """x [N, D] -> [N, out_dim] via a shared Gaussian random projection."""
+    d = x.shape[-1]
+    proj = jax.random.normal(key, (d, out_dim)) / jnp.sqrt(out_dim)
+    return x @ proj
+
+
+def pca_project(x, out_dim: int, iters: int = 12, key=None):
+    """Top-`out_dim` principal components via subspace iteration.
+
+    Returns (projected [N, k], components [D, k]).  Runs entirely in JAX —
+    the server computes it on the same device mesh as the clustering."""
+    n, d = x.shape
+    xc = x - jnp.mean(x, axis=0, keepdims=True)
+    key = key if key is not None else jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (d, out_dim))
+
+    def step(q, _):
+        z = xc.T @ (xc @ q)                  # [D, k] — covariance applied
+        q, _ = jnp.linalg.qr(z)
+        return q, None
+
+    q, _ = jax.lax.scan(step, q, None, length=iters)
+    return xc @ q, q
+
+
+class QuantizedSummary(NamedTuple):
+    q: jax.Array          # int8 [N, D]
+    scale: jax.Array      # f32 [N, 1]
+    zero: jax.Array       # f32 [N, 1]
+
+
+def quantize_summary(x) -> QuantizedSummary:
+    """Per-vector affine int8 quantization (summaries travel the network)."""
+    lo = jnp.min(x, axis=-1, keepdims=True)
+    hi = jnp.max(x, axis=-1, keepdims=True)
+    scale = jnp.maximum(hi - lo, 1e-12) / 255.0
+    q = jnp.clip(jnp.round((x - lo) / scale) - 128, -128, 127).astype(jnp.int8)
+    return QuantizedSummary(q=q, scale=scale, zero=lo)
+
+
+def dequantize_summary(qs: QuantizedSummary):
+    return (qs.q.astype(jnp.float32) + 128.0) * qs.scale + qs.zero
+
+
+def compressed_bytes(n: int, d: int, method: str, out_dim: int = 0) -> int:
+    """Wire size per the paper's bandwidth discussion."""
+    if method == "none":
+        return n * d * 4
+    if method in ("jl", "pca"):
+        return n * out_dim * 4
+    if method in ("jl+int8", "pca+int8"):
+        return n * out_dim + n * 8
+    if method == "int8":
+        return n * d + n * 8
+    raise ValueError(method)

@@ -1,0 +1,66 @@
+"""Stratified coreset sampling (paper §4.1).
+
+"For each device, we construct the coreset by sampling k elements from the
+dataset on this device, while maintaining its original label proportions."
+
+Implemented with fixed shapes so it jits/vmaps across clients:
+
+  * per-class quotas by the largest-remainder method (sum == k exactly),
+  * within-class sampling without replacement via Gumbel priorities and a
+    single lexicographic sort (label-major, priority-minor),
+  * padded datasets supported through a validity mask.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def class_quotas(labels, valid, num_classes: int, k: int):
+    """Largest-remainder quotas per class; classes with no samples get 0."""
+    counts = jnp.zeros(num_classes, jnp.int32).at[labels].add(valid.astype(jnp.int32))
+    n = jnp.maximum(jnp.sum(counts), 1)
+    exact = k * counts / n
+    base = jnp.floor(exact).astype(jnp.int32)
+    base = jnp.minimum(base, counts)
+    remainder = jnp.where(counts > base, exact - base, -1.0)
+    short = k - jnp.sum(base)
+    # hand the `short` leftover slots to the largest remainders (with room)
+    order = jnp.argsort(-remainder)
+    bump = jnp.zeros(num_classes, jnp.int32).at[order].set(
+        (jnp.arange(num_classes) < short).astype(jnp.int32))
+    bump = jnp.where(counts > base, bump, 0)
+    return jnp.minimum(base + bump, counts)
+
+
+def coreset_indices(labels, valid, num_classes: int, k: int, key):
+    """Return (idx [k], keep_mask [k]) — indices into the client's dataset.
+
+    If the client has fewer than k valid samples, trailing slots repeat index
+    0 with keep_mask False.
+    """
+    n = labels.shape[0]
+    quotas = class_quotas(labels, valid, num_classes, k)
+    pri = jax.random.uniform(key, (n,))
+    pri = jnp.where(valid, pri, -1.0)                      # invalid last
+    # lexicographic sort: by label asc, then priority desc
+    pri_rank = jnp.argsort(jnp.argsort(-pri)).astype(jnp.int32)  # 0 = highest
+    sort_key = labels.astype(jnp.int32) * (n + 1) + pri_rank
+    sort_key = jnp.where(valid, sort_key,
+                         jnp.int32(num_classes) * (n + 1) + pri_rank)
+    order = jnp.argsort(sort_key)                          # grouped by class
+    s_labels = labels[order]
+    s_valid = valid[order]
+    # rank within class
+    starts = jnp.zeros(num_classes + 1, jnp.int32).at[s_labels].add(
+        jnp.where(s_valid, 1, 0))
+    starts = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                              jnp.cumsum(starts)[:-1]])
+    rank_in_class = jnp.arange(n) - starts[s_labels]
+    keep = s_valid & (rank_in_class < quotas[s_labels])
+    # compact the kept items to the front, take k
+    comp = jnp.argsort(~keep)                              # kept first (stable)
+    idx = order[comp][:k]
+    keep_mask = keep[comp][:k]
+    idx = jnp.where(keep_mask, idx, 0)
+    return idx, keep_mask

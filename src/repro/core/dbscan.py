@@ -1,0 +1,66 @@
+"""DBSCAN — the clustering baseline the paper replaces (HACCS used it).
+
+TPU-idiomatic dense formulation (DESIGN.md §3): the CPU pointer-chasing
+region query has no TPU analogue, so we build the full O(N²) adjacency from
+the same MXU pairwise-distance primitive K-means uses, and find density-
+connected components by min-label propagation through core points
+(`lax.while_loop` to fixpoint).  The asymptotic O(N²·D) cost — the paper's
+complaint — is intrinsic and shows up in bench_clustering.
+
+Semantics match classic DBSCAN: core points (≥ min_samples neighbors incl.
+self within eps) form components through core-core edges; border points
+adopt a neighboring core's cluster; everything else is noise (-1).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kmeans import pairwise_sq_dist
+
+
+class DBSCANResult(NamedTuple):
+    labels: jax.Array        # [N] int32, -1 = noise
+    num_clusters: jax.Array  # scalar int32
+    core_mask: jax.Array     # [N] bool
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def dbscan(x, eps: float, min_samples: int,
+           use_kernel: bool = False) -> DBSCANResult:
+    n = x.shape[0]
+    d2 = pairwise_sq_dist(x, x, use_kernel)
+    adj = d2 <= eps * eps                                    # [N, N] incl. self
+    degree = jnp.sum(adj, axis=1)
+    core = degree >= min_samples
+
+    core_adj = adj & core[None, :] & core[:, None]           # core-core edges
+    labels0 = jnp.where(core, jnp.arange(n, dtype=jnp.int32), n)
+
+    def cond(state):
+        labels, changed = state
+        return changed
+
+    def step(state):
+        labels, _ = state
+        neigh = jnp.where(core_adj, labels[None, :], n)      # [N, N]
+        new = jnp.minimum(labels, jnp.min(neigh, axis=1))
+        new = jnp.where(core, new, labels)
+        return new, jnp.any(new != labels)
+
+    labels, _ = jax.lax.while_loop(cond, step, (labels0, jnp.bool_(True)))
+
+    # border points: adopt the min core-neighbor label; else noise
+    border_neigh = jnp.where(adj & core[None, :], labels[None, :], n)
+    border_lab = jnp.min(border_neigh, axis=1)
+    labels = jnp.where(core, labels, jnp.where(border_lab < n, border_lab, -1))
+
+    # compact cluster ids to 0..k-1
+    is_root = core & (labels == jnp.arange(n))
+    rank = jnp.cumsum(is_root.astype(jnp.int32)) - 1
+    compact = jnp.where(labels >= 0, rank[jnp.clip(labels, 0, n - 1)], -1)
+    num = jnp.sum(is_root.astype(jnp.int32))
+    return DBSCANResult(compact.astype(jnp.int32), num, core)

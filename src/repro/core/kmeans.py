@@ -1,0 +1,86 @@
+"""K-means (paper §4.2) — kmeans++ init + Lloyd iterations, jit-friendly.
+
+The distance hot spot (N clients × K centroids × D summary dims, every
+iteration) is exactly the shape the Pallas ``pairwise_dist`` kernel tiles
+for the MXU; `use_kernel=True` routes through it.  Under pjit the client
+axis shards over the data mesh axes (see launch/train.py), which is how the
+server clusters 11k+ client summaries without a single-host bottleneck.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_sq_dist(x, c, use_kernel: bool = False):
+    """[N,D] x [K,D] -> [N,K] squared euclidean distances."""
+    if use_kernel:
+        from repro.kernels.ops import pairwise_dist
+        return pairwise_dist(x, c)
+    xx = jnp.sum(jnp.square(x), axis=-1, keepdims=True)
+    cc = jnp.sum(jnp.square(c), axis=-1)
+    xc = x @ c.T
+    return jnp.maximum(xx + cc[None, :] - 2.0 * xc, 0.0)
+
+
+def _kmeanspp_init(x, k: int, key, use_kernel=False):
+    """kmeans++ seeding: each next centroid sampled ∝ D²(x)."""
+    n, d = x.shape
+
+    def body(i, carry):
+        cents, key = carry
+        key, sub = jax.random.split(key)
+        dists = pairwise_sq_dist(x, cents, use_kernel)       # [N, k]
+        active = jnp.arange(k) < i
+        dmin = jnp.min(jnp.where(active[None, :], dists, jnp.inf), axis=1)
+        dmin = jnp.where(jnp.isfinite(dmin), dmin, 0.0)
+        probs = dmin / jnp.maximum(jnp.sum(dmin), 1e-12)
+        idx = jax.random.choice(sub, n, p=probs)
+        return cents.at[i].set(x[idx]), key
+
+    key, sub = jax.random.split(key)
+    first = x[jax.random.randint(sub, (), 0, n)]
+    cents0 = jnp.zeros((k, d), x.dtype).at[0].set(first)
+    cents, _ = jax.lax.fori_loop(1, k, body, (cents0, key))
+    return cents
+
+
+class KMeansResult(NamedTuple):
+    centroids: jax.Array     # [K, D]
+    assignment: jax.Array    # [N] int32
+    inertia: jax.Array       # scalar: sum of squared distances (paper's J)
+    iterations: jax.Array    # scalar int32
+
+
+@functools.partial(jax.jit, static_argnames=("k", "max_iters", "use_kernel"))
+def kmeans(x, k: int, key, max_iters: int = 50, tol: float = 1e-6,
+           use_kernel: bool = False) -> KMeansResult:
+    """Minimize J = sum_j sum_i ||x_i^(j) - c_j||^2 (paper eq. 2)."""
+    n, d = x.shape
+    cents = _kmeanspp_init(x, k, key, use_kernel)
+
+    def cond(state):
+        _, _, delta, it = state
+        return (delta > tol) & (it < max_iters)
+
+    def step(state):
+        cents, _, _, it = state
+        dists = pairwise_sq_dist(x, cents, use_kernel)
+        assign = jnp.argmin(dists, axis=1).astype(jnp.int32)
+        oh = jax.nn.one_hot(assign, k, dtype=x.dtype)        # [N, K]
+        sums = oh.T @ x
+        counts = jnp.sum(oh, axis=0)
+        new = jnp.where(counts[:, None] > 0,
+                        sums / jnp.maximum(counts, 1.0)[:, None], cents)
+        delta = jnp.max(jnp.sum(jnp.square(new - cents), axis=-1))
+        return new, assign, delta, it + 1
+
+    state = (cents, jnp.zeros(n, jnp.int32), jnp.inf, jnp.int32(0))
+    cents, assign, _, iters = jax.lax.while_loop(cond, step, state)
+    dists = pairwise_sq_dist(x, cents, use_kernel)
+    assign = jnp.argmin(dists, axis=1).astype(jnp.int32)
+    inertia = jnp.sum(jnp.min(dists, axis=1))
+    return KMeansResult(cents, assign, inertia, iters)

@@ -1,0 +1,70 @@
+"""Periodic summary refresh — the paper's motivating scenario (§2.1).
+
+Client data is non-stationary, so summaries must be recomputed as data
+drifts.  The registry tracks per-client summaries plus a *cheap* drift
+signal: the P(y) label distribution (O(C), essentially free per the paper's
+Table 2).  A client's expensive encoder summary is refreshed when
+
+  * it has never been computed,
+  * its age exceeds ``max_age_rounds``, or
+  * the cheap P(y) drifted beyond ``kl_threshold`` (symmetric KL)
+
+— which is how the cheap summary and the paper's efficient summary compose
+into an adaptive refresh policy instead of a fixed period.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+def sym_kl(p: np.ndarray, q: np.ndarray, eps: float = 1e-9) -> float:
+    p = p + eps
+    q = q + eps
+    p = p / p.sum()
+    q = q / q.sum()
+    return float(0.5 * (np.sum(p * np.log(p / q)) + np.sum(q * np.log(q / p))))
+
+
+@dataclasses.dataclass
+class RefreshPolicy:
+    max_age_rounds: int = 20
+    kl_threshold: float = 0.05
+
+
+class SummaryRegistry:
+    """Server-side store of client summaries + refresh decisions."""
+
+    def __init__(self, num_clients: int, policy: RefreshPolicy):
+        self.policy = policy
+        self.num_clients = num_clients
+        self.summaries: dict[int, np.ndarray] = {}
+        self.label_dists: dict[int, np.ndarray] = {}
+        self.last_refresh = np.full(num_clients, -(10 ** 9), np.int64)
+        self.refresh_count = 0
+
+    def needs_refresh(self, client: int, round_idx: int,
+                      fresh_label_dist: np.ndarray) -> bool:
+        if client not in self.summaries:
+            return True
+        if round_idx - self.last_refresh[client] >= self.policy.max_age_rounds:
+            return True
+        drift = sym_kl(self.label_dists[client], fresh_label_dist)
+        return drift > self.policy.kl_threshold
+
+    def stale_clients(self, round_idx: int, fresh_label_dists) -> list:
+        return [c for c in range(self.num_clients)
+                if self.needs_refresh(c, round_idx, fresh_label_dists[c])]
+
+    def update(self, client: int, round_idx: int, summary: np.ndarray,
+               label_dist: np.ndarray) -> None:
+        self.summaries[client] = np.asarray(summary)
+        self.label_dists[client] = np.asarray(label_dist)
+        self.last_refresh[client] = round_idx
+        self.refresh_count += 1
+
+    def matrix(self) -> np.ndarray:
+        """Stack all summaries into the clustering input [N, D]."""
+        assert len(self.summaries) == self.num_clients, "missing summaries"
+        return np.stack([self.summaries[c] for c in range(self.num_clients)])

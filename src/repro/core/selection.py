@@ -1,0 +1,73 @@
+"""HACCS-style clustered client selection (paper §2, Fig. 1).
+
+Given (a) the clustering of client distribution summaries and (b) the
+devices' *system* heterogeneity (speed / availability — which changes every
+round), each round selects:
+
+  1. per-cluster quotas proportional to cluster population (statistical
+     coverage — every data distribution is represented), then
+  2. within each cluster, the fastest currently-available devices (system
+     awareness — stragglers are avoided without losing any distribution).
+
+`random` and `fastest` strategies are the baselines the FL benchmark
+compares against.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SelectionConfig:
+    per_round: int = 10
+    strategy: str = "haccs"      # haccs | random | fastest
+
+
+def cluster_quotas(assignment: np.ndarray, num_clusters: int,
+                   per_round: int) -> np.ndarray:
+    """Largest-remainder proportional quotas over non-empty clusters."""
+    counts = np.bincount(assignment[assignment >= 0], minlength=num_clusters)
+    total = counts.sum()
+    if total == 0:
+        return np.zeros(num_clusters, np.int64)
+    exact = per_round * counts / total
+    base = np.floor(exact).astype(np.int64)
+    short = per_round - base.sum()
+    order = np.argsort(-(exact - base))
+    base[order[:short]] += 1
+    return np.minimum(base, counts)
+
+
+def select_devices(assignment: np.ndarray, num_clusters: int,
+                   speeds: np.ndarray, available: np.ndarray,
+                   cfg: SelectionConfig, rng: np.random.Generator) -> np.ndarray:
+    """Return selected device indices for one round."""
+    n = assignment.shape[0]
+    ok = available.astype(bool)
+    if cfg.strategy == "random":
+        pool = np.flatnonzero(ok)
+        take = min(cfg.per_round, pool.size)
+        return rng.choice(pool, size=take, replace=False)
+    if cfg.strategy == "fastest":
+        pool = np.flatnonzero(ok)
+        order = pool[np.argsort(-speeds[pool])]
+        return order[:cfg.per_round]
+    if cfg.strategy != "haccs":
+        raise ValueError(cfg.strategy)
+
+    quotas = cluster_quotas(assignment, num_clusters, cfg.per_round)
+    chosen: list = []
+    for c in range(num_clusters):
+        members = np.flatnonzero((assignment == c) & ok)
+        if members.size == 0 or quotas[c] == 0:
+            continue
+        order = members[np.argsort(-speeds[members])]
+        chosen.extend(order[:quotas[c]].tolist())
+    # backfill if availability starved some clusters
+    if len(chosen) < cfg.per_round:
+        rest = np.setdiff1d(np.flatnonzero(ok), np.asarray(chosen, np.int64))
+        extra = rest[np.argsort(-speeds[rest])][:cfg.per_round - len(chosen)]
+        chosen.extend(extra.tolist())
+    return np.asarray(chosen[:cfg.per_round], np.int64)

@@ -1,0 +1,102 @@
+"""Distribution summaries (the paper's core contribution + both baselines).
+
+Three summary families, all returning flat vectors so the clustering layer
+is summary-agnostic:
+
+  * ``label_distribution``  — P(y), size C                 (cheap baseline)
+  * ``pxy_histogram``       — P(X|y) per-feature histograms, size C*D*B
+                              (the expensive baseline the paper attacks)
+  * ``encoder_summary``     — the paper's method: stratified coreset ->
+                              encoder features -> per-label feature means
+                              concat label distribution, size C*H + C.
+
+The per-label mean and the histogram are MXU-friendly one-hot matmuls; their
+hot paths are the Pallas kernels in ``repro.kernels`` (pure-jnp oracles live
+in ``repro.kernels.ref`` and are used here when kernels are disabled).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.coreset import coreset_indices
+
+
+def label_distribution(labels, valid, num_classes: int):
+    """P(y): [C], sums to 1 (uniform if the client is empty)."""
+    counts = jnp.zeros(num_classes, jnp.float32).at[labels].add(
+        valid.astype(jnp.float32))
+    total = jnp.sum(counts)
+    return jnp.where(total > 0, counts / jnp.maximum(total, 1.0),
+                     1.0 / num_classes)
+
+
+def quantize(features, bins: int, lo: float = 0.0, hi: float = 1.0):
+    """Map feature values to integer bins [0, bins)."""
+    x = jnp.clip((features - lo) / (hi - lo), 0.0, 1.0 - 1e-6)
+    return (x * bins).astype(jnp.int32)
+
+
+def pxy_histogram(features, labels, valid, num_classes: int, bins: int = 16,
+                  lo: float = 0.0, hi: float = 1.0, use_kernel: bool = False):
+    """P(X|y) baseline: per-(class, feature-dim) histograms, normalized per
+    class.  features [N, D] -> [C, D, B] flattened to [C*D*B].
+
+    This is the summary whose cost/size the paper attacks: it scales with
+    the *raw* feature dimensionality D, not the encoder width H."""
+    n, d = features.shape
+    q = quantize(features, bins, lo, hi)                    # [N, D]
+    if use_kernel:
+        from repro.kernels.ops import class_hist
+        hist = class_hist(q, labels, valid, num_classes, bins)
+    else:
+        oh_label = jax.nn.one_hot(jnp.where(valid, labels, num_classes),
+                                  num_classes, dtype=jnp.float32)  # [N, C]
+        oh_bin = jax.nn.one_hot(q, bins, dtype=jnp.float32)        # [N, D, B]
+        hist = jnp.einsum("nc,ndb->cdb", oh_label, oh_bin)
+    denom = jnp.maximum(jnp.sum(hist, axis=-1, keepdims=True), 1.0)
+    return (hist / denom).reshape(-1)
+
+
+def per_label_mean(feats, labels, keep, num_classes: int,
+                   use_kernel: bool = False):
+    """Element-wise mean of feature vectors per label: [C, H] (0 if absent)."""
+    if use_kernel:
+        from repro.kernels.ops import seg_mean
+        return seg_mean(feats, labels, keep, num_classes)
+    oh = jax.nn.one_hot(jnp.where(keep, labels, num_classes), num_classes,
+                        dtype=jnp.float32)                  # [k, C]
+    sums = jnp.einsum("kc,kh->ch", oh, feats.astype(jnp.float32))
+    counts = jnp.sum(oh, axis=0)
+    return sums / jnp.maximum(counts, 1.0)[:, None]
+
+
+def encoder_summary(features, labels, valid, encoder_fn: Callable,
+                    num_classes: int, coreset_k: int, key,
+                    use_kernel: bool = False):
+    """The paper's summary: flat vector of size C*H + C.
+
+    (1) stratified coreset of size k (label proportions preserved),
+    (2) encoder dimension-reduction on the coreset features,
+    (3) concat per-label feature means (C*H) with P(y) (C).
+    """
+    idx, keep = coreset_indices(labels, valid, num_classes, coreset_k, key)
+    core_feats = encoder_fn(features[idx])                  # [k, H]
+    core_labels = labels[idx]
+    means = per_label_mean(core_feats, core_labels, keep, num_classes,
+                           use_kernel=use_kernel)           # [C, H]
+    p_y = label_distribution(labels, valid, num_classes)    # from full data
+    return jnp.concatenate([means.reshape(-1), p_y])
+
+
+def summary_sizes(num_classes: int, feature_dim: int, encoder_dim: int,
+                  bins: int) -> dict:
+    """Size accounting used in the paper's bandwidth/memory discussion."""
+    return {
+        "p_y": num_classes,
+        "p_x_given_y": num_classes * feature_dim * bins,
+        "encoder": num_classes * encoder_dim + num_classes,
+    }

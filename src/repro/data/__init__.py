@@ -1,0 +1,8 @@
+from repro.data.pipeline import batch_iterator  # noqa: F401
+from repro.data.synthetic import (  # noqa: F401
+    FEMNIST_LIKE,
+    OPENIMAGE_LIKE,
+    DatasetSpec,
+    FederatedDataset,
+    small_spec,
+)

@@ -1,0 +1,22 @@
+"""Minimal batching pipeline for client-local training."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def batch_iterator(features, labels, valid, batch_size: int, rng, steps: int):
+    """Yield `steps` batches sampled (with reshuffling) from valid samples."""
+    idx_all = np.flatnonzero(valid)
+    if idx_all.size == 0:
+        raise ValueError("client has no valid samples")
+    order = rng.permutation(idx_all)
+    pos = 0
+    for _ in range(steps):
+        if pos + batch_size > order.size:
+            order = rng.permutation(idx_all)
+            pos = 0
+        take = order[pos:pos + batch_size]
+        if take.size < batch_size:    # tiny client: sample with replacement
+            take = rng.choice(idx_all, size=batch_size, replace=True)
+        pos += batch_size
+        yield features[take], labels[take]

@@ -1,0 +1,5 @@
+from repro.fl.aggregation import fedavg  # noqa: F401
+from repro.fl.client import ClientRuntime, local_train, timed_summary  # noqa: F401
+from repro.fl.models import make_classifier, xent_loss  # noqa: F401
+from repro.fl.rounds import FLConfig, run_federated  # noqa: F401
+from repro.fl.system import SystemModel, SystemSpec  # noqa: F401

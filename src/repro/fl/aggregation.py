@@ -1,0 +1,16 @@
+"""Server-side aggregation: FedAvg over client deltas."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.utils.tree import tree_add, tree_weighted_sum
+
+
+def fedavg(global_params, deltas: list, num_samples: list):
+    """params <- params + Σ (n_i / Σn) Δ_i  (McMahan et al.)."""
+    total = float(sum(num_samples))
+    if total <= 0 or not deltas:
+        return global_params
+    weights = [n / total for n in num_samples]
+    update = tree_weighted_sum(deltas, weights)
+    return tree_add(global_params, update)

@@ -1,0 +1,148 @@
+"""Client runtime: local SGD steps + summary computation (with timing)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.summary import encoder_summary, label_distribution, pxy_histogram
+from repro.data.pipeline import batch_iterator
+from repro.utils.tree import tree_sub
+
+
+class ClientRuntime:
+    """Jitted functions shared by every simulated client.
+
+    fedprox_mu > 0 adds FedProx's proximal term  (mu/2)·||w − w_global||²
+    to the local objective (Li et al., MLSys'20) — standard protection
+    against client drift under the heterogeneity this paper's selection
+    exploits."""
+
+    def __init__(self, loss_fn, opt, batch_size: int, fedprox_mu: float = 0.0):
+        self.opt_init, self.opt_update = opt
+        self.batch_size = batch_size
+        self.fedprox_mu = fedprox_mu
+
+        @jax.jit
+        def local_step(params, global_params, opt_state, feats, labels, step):
+            def objective(p):
+                l, acc = loss_fn(p, feats, labels)
+                if fedprox_mu > 0.0:
+                    prox = sum(jnp.sum(jnp.square(a - b)) for a, b in zip(
+                        jax.tree.leaves(p), jax.tree.leaves(global_params)))
+                    l = l + 0.5 * fedprox_mu * prox
+                return l, acc
+
+            (l, acc), grads = jax.value_and_grad(objective, has_aux=True)(
+                params)
+            updates, opt_state = self.opt_update(grads, opt_state, params, step)
+            params = jax.tree.map(lambda p, u: p + u.astype(p.dtype),
+                                  params, updates)
+            return params, opt_state, l, acc
+
+        self.local_step = local_step
+
+
+def local_train(runtime: ClientRuntime, global_params, feats, labels, valid,
+                steps: int, rng) -> tuple:
+    """Run local steps; returns (delta, num_valid_samples, last_loss)."""
+    params = global_params
+    opt_state = runtime.opt_init(params)
+    last = 0.0
+    it = batch_iterator(feats, labels, valid, runtime.batch_size, rng, steps)
+    for step, (bf, bl) in enumerate(it):
+        params, opt_state, l, _ = runtime.local_step(
+            params, global_params, opt_state, jnp.asarray(bf),
+            jnp.asarray(bl), step)
+        last = float(l)
+    delta = tree_sub(params, global_params)
+    return delta, int(valid.sum()), last
+
+
+# ---------------------------------------------------------------------------
+# summary computation (timed — these timings reproduce paper Table 2)
+
+_SUMMARY_JIT_CACHE: dict = {}
+
+
+def _bucket(n: int) -> int:
+    """Round dataset size up to a power of two so jitted summary functions
+    are reused across clients instead of retracing per client (§Perf —
+    summary pipeline iteration 1)."""
+    b = 8
+    while b < n:
+        b *= 2
+    return b
+
+
+def _jitted_summary(method: str, shapes_key, num_classes, coreset_k, bins,
+                    encoder_fn):
+    key = (method, shapes_key, num_classes, coreset_k, bins, id(encoder_fn))
+    fn = _SUMMARY_JIT_CACHE.get(key)
+    if fn is None:
+        if method == "py":
+            fn = jax.jit(lambda f, l, v, k:
+                         label_distribution(l, v, num_classes))
+        elif method == "pxy":
+            fn = jax.jit(lambda f, l, v, k: pxy_histogram(
+                f.reshape(f.shape[0], -1), l, v, num_classes, bins=bins))
+        elif method == "encoder":
+            fn = jax.jit(lambda f, l, v, k: encoder_summary(
+                f, l, v, encoder_fn, num_classes, coreset_k, k))
+        else:
+            raise ValueError(method)
+        _SUMMARY_JIT_CACHE[key] = fn
+    return fn
+
+
+def timed_summary(method: str, feats, labels, valid, num_classes: int, *,
+                  encoder_fn=None, coreset_k: int = 128, bins: int = 16,
+                  key=None, use_kernel: bool = False, jit: bool = True):
+    """Returns (summary np.ndarray, label_dist np.ndarray, seconds).
+
+    jit=True (default) pads the client dataset to a power-of-two bucket and
+    reuses a jitted summary function across clients — the optimized
+    pipeline.  jit=False is the eager per-client baseline (§Perf)."""
+    feats = jnp.asarray(feats)
+    labels = jnp.asarray(labels)
+    valid = jnp.asarray(valid)
+    key = key if key is not None else jax.random.PRNGKey(0)
+
+    if jit:
+        n = feats.shape[0]
+        b = _bucket(n)
+        if b != n:
+            pad = b - n
+            feats = jnp.concatenate(
+                [feats, jnp.zeros((pad, *feats.shape[1:]), feats.dtype)])
+            labels = jnp.concatenate([labels, jnp.zeros(pad, labels.dtype)])
+            valid = jnp.concatenate([valid, jnp.zeros(pad, bool)])
+        fn = _jitted_summary(method, (b, feats.shape[1:]), num_classes,
+                             coreset_k, bins, encoder_fn)
+        fn(feats, labels, valid, key)  # warm the cache (compile not timed)
+        t0 = time.perf_counter()
+        summary = jax.block_until_ready(fn(feats, labels, valid, key))
+        dt = time.perf_counter() - t0
+        ld = np.asarray(label_distribution(labels, valid, num_classes))
+        return np.asarray(summary), ld, dt
+
+    t0 = time.perf_counter()
+    if method == "py":
+        summary = label_distribution(labels, valid, num_classes)
+    elif method == "pxy":
+        flat = feats.reshape(feats.shape[0], -1)
+        summary = pxy_histogram(flat, labels, valid, num_classes, bins=bins,
+                                use_kernel=use_kernel)
+    elif method == "encoder":
+        assert encoder_fn is not None
+        summary = encoder_summary(feats, labels, valid, encoder_fn,
+                                  num_classes, coreset_k, key,
+                                  use_kernel=use_kernel)
+    else:
+        raise ValueError(method)
+    summary = jax.block_until_ready(summary)
+    dt = time.perf_counter() - t0
+    ld = np.asarray(label_distribution(labels, valid, num_classes))
+    return np.asarray(summary), ld, dt

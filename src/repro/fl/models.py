@@ -1,0 +1,72 @@
+"""Client-side models for federated training.
+
+The FL examples/benchmarks train a small classifier (MLP or the MobileNet-
+style CNN from models/cnn.py with a linear head).  The *assigned
+architectures* plug into the same loop through launch/train.py — the FL
+server only sees param pytrees and deltas, so the model is swappable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import param as pm
+from repro.models.cnn import CNNConfig, cnn_apply, cnn_specs
+from repro.models.param import Spec
+
+
+def mlp_classifier_specs(in_dim: int, hidden: int, num_classes: int) -> dict:
+    return {
+        "w1": Spec((in_dim, hidden), ("embed", "mlp")),
+        "b1": Spec((hidden,), ("mlp",), init="zeros"),
+        "w2": Spec((hidden, hidden), ("mlp", "mlp")),
+        "b2": Spec((hidden,), ("mlp",), init="zeros"),
+        "head": Spec((hidden, num_classes), ("mlp", "classes")),
+        "head_b": Spec((num_classes,), ("classes",), init="zeros"),
+    }
+
+
+def mlp_classifier_apply(params, feats) -> jax.Array:
+    x = feats.reshape(feats.shape[0], -1).astype(jnp.float32)
+    x = jax.nn.relu(x @ params["w1"] + params["b1"])
+    x = jax.nn.relu(x @ params["w2"] + params["b2"])
+    return x @ params["head"] + params["head_b"]
+
+
+def cnn_classifier_specs(cfg: CNNConfig, num_classes: int) -> dict:
+    return {
+        "cnn": cnn_specs(cfg),
+        "head": Spec((cfg.feature_dim, num_classes), ("embed", "classes")),
+        "head_b": Spec((num_classes,), ("classes",), init="zeros"),
+    }
+
+
+def cnn_classifier_apply(params, feats) -> jax.Array:
+    h = cnn_apply(params["cnn"], feats)
+    return h @ params["head"] + params["head_b"]
+
+
+def make_classifier(kind: str, feature_shape, num_classes: int, hidden=64,
+                    cnn_cfg: CNNConfig | None = None):
+    """Returns (init_fn(key)->params, apply_fn(params, feats)->logits)."""
+    if kind == "mlp":
+        in_dim = 1
+        for s in feature_shape:
+            in_dim *= s
+        specs = mlp_classifier_specs(in_dim, hidden, num_classes)
+        return (lambda key: pm.init_tree(specs, key)), mlp_classifier_apply
+    if kind == "cnn":
+        cfg = cnn_cfg or CNNConfig(in_channels=feature_shape[-1])
+        specs = cnn_classifier_specs(cfg, num_classes)
+        return (lambda key: pm.init_tree(specs, key)), cnn_classifier_apply
+    raise ValueError(kind)
+
+
+def xent_loss(apply_fn):
+    def loss(params, feats, labels):
+        logits = apply_fn(params, feats)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+        acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+        return jnp.mean(lse - ll), acc
+    return loss

@@ -1,0 +1,48 @@
+"""System-heterogeneity model (paper §2.2): devices differ in processing
+speed / availability, and both change over time — which is why summaries and
+resource status must be refreshed periodically.
+
+Simulated clock accounting (per round):
+    round_time = max over selected devices of
+                   (local_steps * step_cost / speed_i  +  summary_time_i)
+where summary_time_i is charged only when device i refreshed its summary
+this round — the paper's overhead lands on the straggler path exactly as in
+a synchronous FL deployment.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SystemSpec:
+    speed_sigma: float = 0.8        # lognormal spread of device speeds
+    availability: float = 0.85      # per-round Bernoulli availability
+    step_cost: float = 1.0          # work units per local step
+    speed_drift: float = 0.05       # per-round random walk of speeds
+
+
+class SystemModel:
+    def __init__(self, num_devices: int, spec: SystemSpec, seed: int = 0):
+        self.spec = spec
+        self.rng = np.random.RandomState(seed)
+        self.speeds = self.rng.lognormal(0.0, spec.speed_sigma, num_devices)
+
+    def tick(self) -> np.ndarray:
+        """Advance one round; returns availability mask."""
+        s = self.spec
+        self.speeds *= np.exp(self.rng.normal(0, s.speed_drift,
+                                              self.speeds.shape))
+        return self.rng.rand(self.speeds.shape[0]) < s.availability
+
+    def round_time(self, selected: np.ndarray, local_steps: int,
+                   summary_times: dict[int, float] | None = None) -> float:
+        if selected.size == 0:
+            return 0.0
+        t = self.spec.step_cost * local_steps / self.speeds[selected]
+        if summary_times:
+            t = t + np.asarray([summary_times.get(int(i), 0.0)
+                                for i in selected])
+        return float(np.max(t))

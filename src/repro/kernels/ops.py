@@ -1,0 +1,68 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handles padding to block multiples, picks interpret mode automatically
+(interpret=True on CPU — the kernels target TPU; the container validates
+them through the interpreter), and exposes the same contract as ref.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.class_hist import class_hist_kernel
+from repro.kernels.pairwise_dist import pairwise_dist_kernel
+from repro.kernels.seg_mean import seg_mean_kernel
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, axis: int, mult: int, value=0):
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def pairwise_dist(x, c, *, bn: int = 128, bk: int = 128, bd: int = 256):
+    """[N,D] × [K,D] -> [N,K] squared distances (pads internally)."""
+    n, k = x.shape[0], c.shape[0]
+    bn = min(bn, max(8, n))
+    bk = min(bk, max(8, k))
+    bd = min(bd, max(8, x.shape[1]))
+    xp = _pad_to(_pad_to(x, 0, bn), 1, bd)
+    cp = _pad_to(_pad_to(c, 0, bk), 1, bd)
+    out = pairwise_dist_kernel(xp, cp, bn=bn, bk=bk, bd=bd,
+                               interpret=_interpret())
+    return out[:n, :k]
+
+
+def seg_mean(feats, labels, keep, num_classes: int, *, bn: int = 256):
+    """[N,H] per-label means -> [C,H]."""
+    n = feats.shape[0]
+    bn = min(bn, max(8, n))
+    fp = _pad_to(feats, 0, bn)
+    lp = _pad_to(labels, 0, bn)
+    kp = _pad_to(keep, 0, bn, value=False)
+    return seg_mean_kernel(fp, lp, kp, num_classes, bn=bn,
+                           interpret=_interpret())
+
+
+def class_hist(q, labels, valid, num_classes: int, bins: int, *,
+               bn: int = 256, bd: int = 128):
+    """[N,D] quantized -> [C,D,B] counts."""
+    n, d = q.shape
+    bn = min(bn, max(8, n))
+    bd = min(bd, max(8, d))
+    qp = _pad_to(_pad_to(q, 0, bn, value=-1), 1, bd, value=-1)
+    lp = _pad_to(labels, 0, bn)
+    vp = _pad_to(valid, 0, bn, value=False)
+    out = class_hist_kernel(qp, lp, vp, num_classes, bins, bn=bn, bd=bd,
+                            interpret=_interpret())
+    return out[:, :d, :]

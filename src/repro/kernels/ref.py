@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function mirrors the kernel contract exactly (shapes, dtypes, padding
+semantics) so tests can `assert_allclose(kernel(x), ref(x))` across
+shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_dist_ref(x, c):
+    """[N,D], [K,D] -> [N,K] squared euclidean distances, fp32 accumulate."""
+    x = x.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    xx = jnp.sum(jnp.square(x), axis=-1, keepdims=True)
+    cc = jnp.sum(jnp.square(c), axis=-1)
+    return jnp.maximum(xx + cc[None, :] - 2.0 * (x @ c.T), 0.0)
+
+
+def seg_mean_ref(feats, labels, keep, num_classes: int):
+    """Per-label mean of feature vectors: [N,H] -> [C,H] (0 where absent)."""
+    oh = jax.nn.one_hot(jnp.where(keep, labels, num_classes), num_classes,
+                        dtype=jnp.float32)
+    sums = jnp.einsum("nc,nh->ch", oh, feats.astype(jnp.float32))
+    counts = jnp.sum(oh, axis=0)
+    return sums / jnp.maximum(counts, 1.0)[:, None]
+
+
+def class_hist_ref(q, labels, valid, num_classes: int, bins: int):
+    """Quantized features [N,D] int32 -> per-class histograms [C,D,B] fp32."""
+    oh_label = jax.nn.one_hot(jnp.where(valid, labels, num_classes),
+                              num_classes, dtype=jnp.float32)
+    oh_bin = jax.nn.one_hot(q, bins, dtype=jnp.float32)
+    return jnp.einsum("nc,ndb->cdb", oh_label, oh_bin)

@@ -1,0 +1,56 @@
+"""Named sharding-rule variants.
+
+"baseline" is the paper-faithful default layout (FSDP over data axes, tensor/
+expert parallel over model).  The perf hillclimb (§Perf) registers
+alternatives here so a dry-run of any variant is one `--rules` flag away —
+sharding experiments never touch model code.
+"""
+from __future__ import annotations
+
+RULES: dict[str, dict] = {
+    # FSDP over data, TP/EP over model, batch over (pod, data).
+    "baseline": {},
+    # Multi-pod FSDP: shard parameter embed dims over pod*data (ZeRO across
+    # pods; pays cross-DCN all-gathers, saves HBM).
+    "fsdp-pod": {"embed": ("pod", "data")},
+    # Sequence-sharded activations for long-context training/prefill.
+    "seq-data": {"seq": ("data",)},
+    # Replicate small params entirely (no FSDP) — latency-optimal decode.
+    "replicated-params": {"embed": (), "mlp": (), "heads": (),
+                          "kv_heads": (), "vocab": ()},
+    # Shard attention heads over data too when model axis doesn't divide.
+    "heads-data": {"heads": ("model", "data")},
+    # Decode: shard the KV-cache sequence dim over "model" (kv_heads rarely
+    # divide 16, so the baseline cache is replicated across the model axis —
+    # this variant is the sequence-sharded-cache fix for decode shapes).
+    "cache-seq-model": {"cache_seq": ("model", "data")},
+    # Decode: shard caches over head_dim instead — the per-step
+    # dynamic-update-slice then touches only local shards (no cache
+    # all-gather); attention pays one small scores-psum per layer.
+    "cache-headdim": {"head_dim": ("model",), "cache_seq": ("data",)},
+}
+
+
+def get_rules(name: str) -> dict:
+    if name not in RULES:
+        raise KeyError(f"unknown rules {name!r}; known: {sorted(RULES)}")
+    return RULES[name]
+
+# registered after the first cache-headdim measurement refuted the
+# cache_seq+head_dim combination: the rolling-window update still re-shards
+# the data-sharded seq dim.  head_dim-only sharding keeps every per-step
+# cache update fully local.
+RULES["cache-headdim-only"] = {"head_dim": ("model",), "cache_seq": ()}
+
+# Serving layout (decode iterations 3): FSDP weight-gathering per decode
+# step was the real source of the residual all-gathers (24 GB/step llama4,
+# 114 GB/step llama-vision) — replicate the data-axis weight shards (keep
+# model-axis TP) and shard caches over head_dim so per-step updates are
+# local.  This is the classic "training layout != serving layout" split.
+RULES["serve-decode"] = {"embed": (), "expert_embed": (), "lora": (),
+                         "head_dim": ("model",), "cache_seq": ()}
+
+# MLA caches have no head_dim: shard the latent rank over "model" instead
+# (kv_lora 512 / 16 = 32) — params with a lora dim become TP-sharded too.
+RULES["serve-decode-mla"] = {"embed": (), "expert_embed": (), "cache_seq": (),
+                             "head_dim": ("model",), "lora": ("model",)}

@@ -1,0 +1,2 @@
+from repro.models.api import build_model  # noqa: F401
+from repro.models.transformer import Model  # noqa: F401

@@ -1,0 +1,17 @@
+"""Public model-zoo API."""
+from __future__ import annotations
+
+import functools
+
+from repro.configs import ModelConfig, get_config
+from repro.models.transformer import Model
+
+
+@functools.lru_cache(maxsize=64)
+def _build_cached(cfg: ModelConfig) -> Model:
+    return Model(cfg)
+
+
+def build_model(cfg_or_name) -> Model:
+    cfg = get_config(cfg_or_name) if isinstance(cfg_or_name, str) else cfg_or_name
+    return _build_cached(cfg)

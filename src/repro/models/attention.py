@@ -1,0 +1,455 @@
+"""Attention: memory-efficient blockwise core + GQA / MLA / cross blocks.
+
+The core never materializes the full [Sq, Sk] score matrix for large
+sequences: queries are processed in blocks (lax.map) and keys/values are
+streamed in blocks (lax.scan) with the usual running-max/denominator
+(flash-attention recurrence) in fp32.  Sliding-window and causal masks are
+derived from *absolute positions*, which makes the same core serve training,
+prefill, rolling-window decode caches and full decode caches.
+
+Decode (Sq == 1) takes the direct path — the score row is tiny and GSPMD
+shards it over the cache's sequence axis for the 524k-token shape.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ShardCtx, rmsnorm, rmsnorm_spec, rope
+from repro.models.param import Spec
+
+_NEG = -1e30
+
+
+def _mask(q_pos, k_pos, *, causal: bool, window: int):
+    """[Sq, Sk] boolean mask from absolute positions (k_pos < 0 = invalid)."""
+    q = q_pos[:, None].astype(jnp.int32)
+    k = k_pos[None, :].astype(jnp.int32)
+    m = k >= 0
+    if causal:
+        m &= k <= q
+    if window > 0:
+        m &= (q - k) < window
+    return m
+
+
+def _attend_full(q, k, v, q_pos, k_pos, *, causal, window, scale):
+    """Direct path: q [B,Sq,KV,G,D], k [B,Sk,KV,D], v [B,Sk,KV,Dv]."""
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q, k, preferred_element_type=jnp.float32)
+    s = s * scale
+    m = _mask(q_pos, k_pos, causal=causal, window=window)
+    s = jnp.where(m[None, None, None], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    all_masked = ~jnp.any(m, axis=-1)  # [Sq]
+    p = jnp.where(all_masked[None, None, None, :, None], 0.0, p)
+    o = jnp.einsum("bkgqs,bskv->bqkgv", p.astype(v.dtype), v)
+    return o
+
+
+def _band(window: int, q_block: int, kv_block: int, Sk: int, banded: bool):
+    """Static banded-attention geometry: for sliding-window layers only the
+    kv range [q_start+q_block-Lw, q_start+q_block) can be unmasked, so the
+    inner scan shrinks from Sk/kv_block to Lw/kv_block steps (§Perf iter)."""
+    if not banded or window <= 0:
+        return Sk, False
+    lw = window + q_block - 1
+    lw = ((lw + kv_block - 1) // kv_block) * kv_block
+    return min(lw, Sk), lw < Sk
+
+
+def _flash_fwd_impl(q, k, v, q_pos, k_pos, *, causal, window, scale,
+                    q_block, kv_block, banded=False):
+    """Streaming attention forward.  Returns (o [B,Sq,KV,G,Dv],
+    L [B,KV,G,Sq] row logsumexp) — exactly the flash-attention residuals."""
+    B, Sq, KV, G, D = q.shape
+    Sk, Dv = k.shape[1], v.shape[-1]
+    nq = Sq // q_block
+    lw, use_band = _band(window, q_block, kv_block, Sk, banded)
+    nk = lw // kv_block
+
+    def one_q_block(iq):
+        qs = iq * q_block
+        qb = jax.lax.dynamic_slice_in_dim(q, qs, q_block, axis=1)
+        qp = jax.lax.dynamic_slice_in_dim(q_pos, qs, q_block, axis=0)
+        band0 = jnp.clip(qs + q_block - lw, 0, Sk - lw) if use_band else 0
+
+        def kv_step(carry, ik):
+            m_run, l_run, acc = carry
+            ks = band0 + ik * kv_block
+            kb = jax.lax.dynamic_slice_in_dim(k, ks, kv_block, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(v, ks, kv_block, axis=1)
+            kp = jax.lax.dynamic_slice_in_dim(k_pos, ks, kv_block, axis=0)
+            # ops inside this scope are VMEM-resident in the Pallas flash
+            # kernel (kernels/flash_attention.py) — tagged so the roofline
+            # can report the fused-attention HBM traffic (bytes_fused)
+            with jax.named_scope("flash_tile"):
+                s = jnp.einsum("bqkgd,bskd->bkgqs", qb, kb,
+                               preferred_element_type=jnp.float32) * scale
+                msk = _mask(qp, kp, causal=causal, window=window)
+                s = jnp.where(msk[None, None, None], s, _NEG)
+                m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+                alpha = jnp.exp(m_run - m_new)
+                p = jnp.exp(s - m_new[..., None])
+                l_new = l_run * alpha + jnp.sum(p, axis=-1)
+                acc_new = acc * alpha[..., None] + jnp.einsum(
+                    "bkgqs,bskv->bkgqv", p.astype(v.dtype), vb,
+                    preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, q_block), _NEG, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_block), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, q_block, Dv), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        lse = jnp.where(l_f == 0.0, 1e30, m_f + jnp.log(jnp.maximum(l_f, 1e-37)))
+        l_safe = jnp.where(l_f == 0.0, 1.0, l_f)
+        out = acc / l_safe[..., None]                    # [B,KV,G,Bq,Dv]
+        return jnp.transpose(out, (0, 3, 1, 2, 4)), lse  # [B,Bq,KV,G,Dv]
+
+    o_blk, lse_blk = jax.lax.map(one_q_block, jnp.arange(nq))
+    o = jnp.moveaxis(o_blk, 0, 1).reshape(B, Sq, KV, G, Dv)
+    # lse_blk: [nq, B, KV, G, Bq] -> [B, KV, G, nq*Bq]
+    lse = jnp.moveaxis(lse_blk, 0, 3).reshape(B, KV, G, Sq)
+    return o, lse
+
+
+def _flash_bwd_impl(q, k, v, o, lse, do, q_pos, k_pos, *, causal, window,
+                    scale, q_block, kv_block, banded=False):
+    """Flash backward: recompute p per tile from (q,k,lse); never
+    materializes S²."""
+    B, Sq, KV, G, D = q.shape
+    Sk, Dv = k.shape[1], v.shape[-1]
+    nq = Sq // q_block
+    lw, use_band = _band(window, q_block, kv_block, Sk, banded)
+    nk = lw // kv_block
+    of = o.astype(jnp.float32)
+    dof = do.astype(jnp.float32)
+    delta = jnp.einsum("bqkgv,bqkgv->bkgq", of, dof)       # [B,KV,G,Sq]
+
+    dk0 = jnp.zeros((B, Sk, KV, D), jnp.float32)
+    dv0 = jnp.zeros((B, Sk, KV, Dv), jnp.float32)
+
+    def q_step(carry, iq):
+        dk, dv = carry
+        qs = iq * q_block
+        qb = jax.lax.dynamic_slice_in_dim(q, qs, q_block, axis=1)
+        qp = jax.lax.dynamic_slice_in_dim(q_pos, qs, q_block, axis=0)
+        dob = jax.lax.dynamic_slice_in_dim(dof, qs, q_block, axis=1)
+        lb = jax.lax.dynamic_slice_in_dim(lse, qs, q_block, axis=3)
+        db = jax.lax.dynamic_slice_in_dim(delta, qs, q_block, axis=3)
+        band0 = jnp.clip(qs + q_block - lw, 0, Sk - lw) if use_band else 0
+
+        def kv_step(c2, ik):
+            dqb, dk, dv = c2
+            ks = band0 + ik * kv_block
+            kb = jax.lax.dynamic_slice_in_dim(k, ks, kv_block, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(v, ks, kv_block, axis=1)
+            kp = jax.lax.dynamic_slice_in_dim(k_pos, ks, kv_block, axis=0)
+            with jax.named_scope("flash_tile"):
+                s = jnp.einsum("bqkgd,bskd->bkgqs", qb, kb,
+                               preferred_element_type=jnp.float32) * scale
+                msk = _mask(qp, kp, causal=causal, window=window)
+                s = jnp.where(msk[None, None, None], s, _NEG)
+                p = jnp.exp(s - lb[..., None])             # [B,KV,G,Bq,Bk]
+                dv_j = jnp.einsum("bkgqs,bqkgv->bskv", p, dob)
+                dp = jnp.einsum("bqkgv,bskv->bkgqs", dob,
+                                vb.astype(jnp.float32))
+                ds = p * (dp - db[..., None])
+                dqb = dqb + jnp.einsum("bkgqs,bskd->bqkgd", ds,
+                                       kb.astype(jnp.float32)) * scale
+                dk_j = jnp.einsum("bkgqs,bqkgd->bskd", ds,
+                                  qb.astype(jnp.float32)) * scale
+            old_k = jax.lax.dynamic_slice_in_dim(dk, ks, kv_block, axis=1)
+            old_v = jax.lax.dynamic_slice_in_dim(dv, ks, kv_block, axis=1)
+            dk = jax.lax.dynamic_update_slice_in_dim(dk, old_k + dk_j, ks, axis=1)
+            dv = jax.lax.dynamic_update_slice_in_dim(dv, old_v + dv_j, ks, axis=1)
+            return (dqb, dk, dv), None
+
+        dq0 = jnp.zeros((B, q_block, KV, G, D), jnp.float32)
+        (dqb, dk, dv), _ = jax.lax.scan(kv_step, (dq0, dk, dv), jnp.arange(nk))
+        return (dk, dv), dqb
+
+    (dk, dv), dq_blk = jax.lax.scan(q_step, (dk0, dv0), jnp.arange(nq))
+    dq = jnp.moveaxis(dq_blk, 0, 1).reshape(B, Sq, KV, G, D)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _flash(static, q, k, v, q_pos, k_pos):
+    causal, window, scale, q_block, kv_block, banded = static
+    o, _ = _flash_fwd_impl(q, k, v, q_pos, k_pos, causal=causal,
+                           window=window, scale=scale, q_block=q_block,
+                           kv_block=kv_block, banded=banded)
+    return o
+
+
+def _flash_fwd(static, q, k, v, q_pos, k_pos):
+    causal, window, scale, q_block, kv_block, banded = static
+    o, lse = _flash_fwd_impl(q, k, v, q_pos, k_pos, causal=causal,
+                             window=window, scale=scale, q_block=q_block,
+                             kv_block=kv_block, banded=banded)
+    return o, (q, k, v, o, lse, q_pos, k_pos)
+
+
+def _flash_bwd(static, res, do):
+    causal, window, scale, q_block, kv_block, banded = static
+    q, k, v, o, lse, q_pos, k_pos = res
+    dq, dk, dv = _flash_bwd_impl(q, k, v, o, lse, do, q_pos, k_pos,
+                                 causal=causal, window=window, scale=scale,
+                                 q_block=q_block, kv_block=kv_block,
+                                 banded=banded)
+    import numpy as _np
+    zero_pos = lambda p: _np.zeros(p.shape, jax.dtypes.float0)  # noqa: E731
+    return dq, dk, dv, zero_pos(q_pos), zero_pos(k_pos)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def _attend_blockwise(q, k, v, q_pos, k_pos, *, causal, window, scale,
+                      q_block, kv_block, banded=False):
+    """custom_vjp flash attention: residuals are only (q,k,v,o,lse)."""
+    static = (bool(causal), int(window), float(scale), int(q_block),
+              int(kv_block), bool(banded))
+    return _flash(static, q, k, v, q_pos, k_pos)
+
+
+def attend(q, k, v, q_pos, k_pos, *, causal=True, window=0, scale=None,
+           q_block=1024, kv_block=1024, banded=False):
+    """q [B,Sq,H,D] / k [B,Sk,KV,D] / v [B,Sk,KV,Dv] -> [B,Sq,H,Dv].
+
+    GQA handled by folding H into (KV, G).  Chooses direct vs blockwise by
+    problem size (decode and smoke shapes take the direct path).  With
+    banded=True, sliding-window layers only visit in-band KV blocks."""
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    Sk = k.shape[1]
+    assert H % KV == 0, (H, KV)
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qg = q.reshape(B, Sq, KV, G, D)
+    small = (Sq * Sk <= 2048 * 2048) or (Sq == 1)
+    if small or Sq % q_block or Sk % kv_block:
+        o = _attend_full(qg, k, v, q_pos, k_pos, causal=causal,
+                         window=window, scale=scale)
+    else:
+        o = _attend_blockwise(qg, k, v, q_pos, k_pos, causal=causal,
+                              window=window, scale=scale,
+                              q_block=q_block, kv_block=kv_block,
+                              banded=banded)
+    return o.reshape(B, Sq, H, v.shape[-1]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block (optionally sliding-window, optionally cross)
+
+
+def gqa_specs(cfg, cross: bool = False) -> dict:
+    d, H, KV, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    specs = {
+        "norm": rmsnorm_spec(d),
+        "wq": Spec((d, H, Dh), ("embed", "heads", "head_dim")),
+        "wk": Spec((d, KV, Dh), ("embed", "kv_heads", "head_dim")),
+        "wv": Spec((d, KV, Dh), ("embed", "kv_heads", "head_dim")),
+        "wo": Spec((H, Dh, d), ("heads", "head_dim", "embed"), scale=1.0 / math.sqrt(H * Dh)),
+    }
+    if cross:
+        specs["gate"] = Spec((), (), init="zeros")
+    return specs
+
+
+def _window_slots(S: int, window: int):
+    """Map the last `window` of S prefill positions into a rolling cache."""
+    pos = jnp.arange(S - window, S)
+    return pos % window, pos
+
+
+def gqa_prefill(p, x, positions, ctx: ShardCtx, cfg, *, window=0, causal=True,
+                memory=None, want_cache=False, cache_len=0):
+    """Training / prefill forward.  memory != None -> cross-attention."""
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].astype(h.dtype))
+    src = memory if memory is not None else h
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"].astype(h.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"].astype(h.dtype))
+    if memory is None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        k_pos = positions
+    else:
+        k_pos = jnp.arange(src.shape[1])
+        causal = False
+    q = ctx.constrain(q, ("batch", None, "heads", None))
+    o = attend(q, k, v, positions, k_pos, causal=causal, window=window,
+               banded=getattr(cfg, "banded_attention", False))
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(h.dtype))
+    if "gate" in p:
+        out = out * jnp.tanh(p["gate"].astype(out.dtype))
+    cache = None
+    if want_cache:
+        S = k.shape[1]
+        if memory is not None:
+            cache = {"k": k, "v": v}          # static memory cache
+        elif window and S >= window:
+            slots, _ = _window_slots(S, window)
+            kc = jnp.zeros((k.shape[0], window, *k.shape[2:]), k.dtype)
+            vc = jnp.zeros_like(kc)
+            cache = {
+                "k": kc.at[:, slots].set(k[:, S - window:]),
+                "v": vc.at[:, slots].set(v[:, S - window:]),
+            }
+        else:
+            L = max(cache_len, S)
+            if window:
+                L = min(L, window)
+            kc = jnp.zeros((k.shape[0], L, *k.shape[2:]), k.dtype)
+            vc = jnp.zeros_like(kc)
+            cache = {"k": kc.at[:, :S].set(k[:, :L]),
+                     "v": vc.at[:, :S].set(v[:, :L])}
+    return out, cache
+
+
+def gqa_cache_specs(cfg, batch: int, seq: int, *, window=0, cross_len=0) -> dict:
+    KV, Dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    L = cross_len if cross_len else (min(window, seq) if window else seq)
+    sh = (batch, L, KV, Dh)
+    ax = ("batch", "cache_seq", "kv_heads", "head_dim")
+    return {"k": Spec(sh, ax, init="zeros", dtype=jnp.dtype(cfg.compute_dtype)),
+            "v": Spec(sh, ax, init="zeros", dtype=jnp.dtype(cfg.compute_dtype))}
+
+
+def gqa_decode(p, x, cache, pos, ctx: ShardCtx, cfg, *, window=0, cross=False):
+    """One-token decode step.  pos: scalar int32 current position."""
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].astype(h.dtype))
+    if cross:
+        k, v = cache["k"], cache["v"]
+        k_pos = jnp.arange(k.shape[1])
+        o = attend(q, k, v, pos[None], k_pos, causal=False, window=0)
+        new_cache = cache
+    else:
+        q = rope(q, pos[None], cfg.rope_theta)
+        k_new = jnp.einsum("bsd,dhk->bshk", h, p["wk"].astype(h.dtype))
+        v_new = jnp.einsum("bsd,dhk->bshk", h, p["wv"].astype(h.dtype))
+        k_new = rope(k_new, pos[None], cfg.rope_theta)
+        L = cache["k"].shape[1]
+        if window and L == window:
+            slot = jnp.mod(pos, window)
+            k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=1)
+            v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=1)
+            s = jnp.arange(window)
+            k_pos = pos - jnp.mod(pos - s, window)   # absolute pos per slot
+        else:
+            k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, pos, axis=1)
+            v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, pos, axis=1)
+            k_pos = jnp.arange(L)
+        o = attend(q, k, v, pos[None], k_pos, causal=True, window=window)
+        new_cache = {"k": k, "v": v}
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(h.dtype))
+    if "gate" in p:
+        out = out * jnp.tanh(p["gate"].astype(out.dtype))
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3 multi-head latent attention)
+
+
+def mla_specs(cfg) -> dict:
+    d, H = cfg.d_model, cfg.num_heads
+    qr, kr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    return {
+        "norm": rmsnorm_spec(d),
+        "wq_a": Spec((d, qr), ("embed", "lora")),
+        "q_norm": Spec((qr,), ("lora",), init="ones"),
+        "wq_b": Spec((qr, H, dn + dr), ("lora", "heads", "qk_dim")),
+        "wkv_a": Spec((d, kr + dr), ("embed", "lora")),
+        "kv_norm": Spec((kr,), ("lora",), init="ones"),
+        "wk_b": Spec((kr, H, dn), ("lora", "heads", "qk_dim")),
+        "wv_b": Spec((kr, H, dv), ("lora", "heads", "head_dim")),
+        "wo": Spec((H, dv, d), ("heads", "head_dim", "embed"), scale=1.0 / math.sqrt(H * dv)),
+    }
+
+
+def _mla_q(p, h, positions, cfg):
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    qa = rmsnorm(jnp.einsum("bsd,dr->bsr", h, p["wq_a"].astype(h.dtype)),
+                 p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", qa, p["wq_b"].astype(h.dtype))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_kv_latent(p, h, positions, cfg):
+    kr, dr = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    kv = jnp.einsum("bsd,dr->bsr", h, p["wkv_a"].astype(h.dtype))
+    c = rmsnorm(kv[..., :kr], p["kv_norm"], cfg.norm_eps)
+    k_rope = rope(kv[..., kr:][:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return c, k_rope
+
+
+def mla_prefill(p, x, positions, ctx: ShardCtx, cfg, *, want_cache=False,
+                cache_len=0):
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    q_nope, q_rope = _mla_q(p, h, positions, cfg)
+    c, k_rope = _mla_kv_latent(p, h, positions, cfg)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c, p["wk_b"].astype(h.dtype))
+    v = jnp.einsum("bsr,rhv->bshv", c, p["wv_b"].astype(h.dtype))
+    H = cfg.num_heads
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :], (*k_rope.shape[:2], H, dr))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    q = ctx.constrain(q, ("batch", None, "heads", None))
+    o = attend(q, k, v, positions, positions, causal=True,
+               scale=1.0 / math.sqrt(dn + dr))
+    out = jnp.einsum("bshv,hvd->bsd", o, p["wo"].astype(h.dtype))
+    cache = None
+    if want_cache:
+        S = c.shape[1]
+        L = max(cache_len, S)
+        cc = jnp.zeros((c.shape[0], L, c.shape[2]), c.dtype).at[:, :S].set(c)
+        kk = jnp.zeros((k_rope.shape[0], L, k_rope.shape[2]),
+                       k_rope.dtype).at[:, :S].set(k_rope)
+        cache = {"c": cc, "k_rope": kk}
+    return out, cache
+
+
+def mla_cache_specs(cfg, batch: int, seq: int) -> dict:
+    dt = jnp.dtype(cfg.compute_dtype)
+    return {
+        "c": Spec((batch, seq, cfg.kv_lora_rank), ("batch", "cache_seq", "lora"),
+                  init="zeros", dtype=dt),
+        "k_rope": Spec((batch, seq, cfg.qk_rope_head_dim),
+                       ("batch", "cache_seq", None), init="zeros", dtype=dt),
+    }
+
+
+def mla_decode(p, x, cache, pos, ctx: ShardCtx, cfg):
+    """Absorbed-matrix decode: attention runs in the latent space; the KV
+    cache holds only (c, k_rope) per token — MLA's production win."""
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    q_nope, q_rope = _mla_q(p, h, pos[None], cfg)
+    c_new, kr_new = _mla_kv_latent(p, h, pos[None], cfg)
+    c = jax.lax.dynamic_update_slice_in_dim(cache["c"], c_new, pos, axis=1)
+    krope = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], kr_new, pos, axis=1)
+    # absorb W_uk into the query
+    q_lat = jnp.einsum("bqhk,rhk->bqhr", q_nope, p["wk_b"].astype(h.dtype))
+    s = jnp.einsum("bqhr,bsr->bhqs", q_lat, c, preferred_element_type=jnp.float32)
+    s = s + jnp.einsum("bqhk,bsk->bhqs", q_rope, krope,
+                       preferred_element_type=jnp.float32)
+    s = s / math.sqrt(dn + dr)
+    k_pos = jnp.arange(c.shape[1])
+    msk = (k_pos <= pos)[None, None, None, :]
+    s = jnp.where(msk, s, _NEG)
+    w = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhqs,bsr->bqhr", w.astype(c.dtype), c)
+    o = jnp.einsum("bqhr,rhv->bqhv", o_lat, p["wv_b"].astype(h.dtype))
+    out = jnp.einsum("bqhv,hvd->bqd", o, p["wo"].astype(h.dtype))
+    return out, {"c": c, "k_rope": krope}

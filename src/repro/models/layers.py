@@ -1,0 +1,112 @@
+"""Shared layer primitives: norms, RoPE, MLPs, embeddings, sharding hints."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.param import Spec
+from repro.utils.sharding import make_spec
+
+# ---------------------------------------------------------------------------
+# activation sharding constraints (no-ops when mesh is None)
+
+
+class ShardCtx:
+    """Carries the mesh + rule table into model code so activations can be
+    constrained with *logical* axis names."""
+
+    def __init__(self, mesh=None, rules=None):
+        self.mesh = mesh
+        self.rules = rules
+
+    def constrain(self, x, logical_axes):
+        if self.mesh is None:
+            return x
+        spec = make_spec(logical_axes, x.shape, self.mesh, self.rules)
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(self.mesh, spec)
+        )
+
+
+NO_SHARD = ShardCtx(None)
+
+# ---------------------------------------------------------------------------
+# norms
+
+
+def rmsnorm_spec(d: int) -> Spec:
+    return Spec((d,), ("embed",), init="ones")
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+
+
+def rope(x, positions, theta: float):
+    """x: [..., S, H, D] with D even; positions: broadcastable to [..., S]."""
+    d = x.shape[-1]
+    assert d % 2 == 0, f"rope dim must be even, got {d}"
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    angles = angles[..., None, :]                              # broadcast heads
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# dense (SwiGLU) MLP
+
+
+def mlp_specs(d_model: int, d_ff: int) -> dict:
+    return {
+        "norm": rmsnorm_spec(d_model),
+        "w_gate": Spec((d_model, d_ff), ("embed", "mlp")),
+        "w_up": Spec((d_model, d_ff), ("embed", "mlp")),
+        "w_down": Spec((d_ff, d_model), ("mlp", "embed")),
+    }
+
+
+def mlp_apply(p, x, ctx: ShardCtx, eps: float = 1e-6):
+    h = rmsnorm(x, p["norm"], eps)
+    gate = jnp.einsum("bsd,df->bsf", h, p["w_gate"].astype(h.dtype))
+    up = jnp.einsum("bsd,df->bsf", h, p["w_up"].astype(h.dtype))
+    act = jax.nn.silu(gate) * up
+    act = ctx.constrain(act, ("batch", None, "mlp"))
+    return jnp.einsum("bsf,fd->bsd", act, p["w_down"].astype(h.dtype))
+
+
+# ---------------------------------------------------------------------------
+# embeddings / lm head
+
+
+def embed_specs(vocab: int, d_model: int, tie: bool) -> dict:
+    specs = {"tokens": Spec((vocab, d_model), ("vocab", "embed"), init="embed")}
+    if not tie:
+        specs["lm_head"] = Spec((d_model, vocab), ("embed", "vocab"))
+    return specs
+
+
+def embed_apply(p, token_ids, compute_dtype):
+    return jnp.take(p["tokens"], token_ids, axis=0).astype(compute_dtype)
+
+
+def unembed_apply(p, x, ctx: ShardCtx):
+    if "lm_head" in p:
+        logits = jnp.einsum("bsd,dv->bsv", x, p["lm_head"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("bsd,vd->bsv", x, p["tokens"].astype(x.dtype))
+    return ctx.constrain(logits, ("batch", None, "vocab"))

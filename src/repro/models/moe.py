@@ -1,0 +1,211 @@
+"""Top-k routed Mixture-of-Experts with expert parallelism.
+
+TPU adaptation (DESIGN.md §3): instead of the GShard [T,E,C] one-hot
+dispatch einsum (whose memory is quadratic in the token group size — fatal
+at E=256), we use a **sort-based capacity dispatch**: tokens are argsorted
+by expert id, given positions within their expert via a cumulative count,
+dropped beyond capacity, and gathered into an [E, C, d] buffer that feeds
+MXU-shaped per-expert einsums.  Under distribution the layer runs inside
+``shard_map``: experts are sharded over the "model" mesh axis, tokens over
+the data axes; every model-rank routes its (replicated-over-model) token
+block, computes only its own experts, and a ``psum`` over "model" combines
+expert outputs — the collective pattern of production expert parallelism
+(the psum plays the role of the combine all-to-all; token blocks are
+already resident per data shard, so no dispatch all-to-all is needed).
+
+The router aux (load-balance) loss is the standard  E * Σ_e f_e · p_e.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import ShardCtx, rmsnorm, rmsnorm_spec
+from repro.models.param import Spec
+
+
+def moe_specs(cfg, d_ff: int) -> dict:
+    d, E = cfg.d_model, cfg.num_experts
+    specs = {
+        "norm": rmsnorm_spec(d),
+        "router": Spec((d, E), ("embed", "experts"), dtype=jnp.float32),
+    }
+    if getattr(cfg, "quant_experts", False):
+        # §Perf (MoE decode is weight-streaming-bound): int8 expert weights
+        # with per-(expert, out-channel) fp32 scales — halves/quarters the
+        # per-step HBM read of resident experts vs bf16/fp32
+        specs.update({
+            "w_gate_q": Spec((E, d, d_ff), ("experts", "expert_embed",
+                                            "expert_mlp"), dtype=jnp.int8),
+            "w_gate_s": Spec((E, 1, d_ff), ("experts", None, "expert_mlp"),
+                             init="ones", dtype=jnp.float32),
+            "w_up_q": Spec((E, d, d_ff), ("experts", "expert_embed",
+                                          "expert_mlp"), dtype=jnp.int8),
+            "w_up_s": Spec((E, 1, d_ff), ("experts", None, "expert_mlp"),
+                           init="ones", dtype=jnp.float32),
+            "w_down_q": Spec((E, d_ff, d), ("experts", "expert_mlp",
+                                            "expert_embed"), dtype=jnp.int8),
+            "w_down_s": Spec((E, 1, d), ("experts", None, "expert_embed"),
+                             init="ones", dtype=jnp.float32),
+        })
+    else:
+        # expert weights get their own d_model logical axis ("expert_embed")
+        # so serving layouts can un-FSDP them independently (rules.py)
+        specs.update({
+            "w_gate": Spec((E, d, d_ff), ("experts", "expert_embed",
+                                          "expert_mlp")),
+            "w_up": Spec((E, d, d_ff), ("experts", "expert_embed",
+                                        "expert_mlp")),
+            "w_down": Spec((E, d_ff, d), ("experts", "expert_mlp",
+                                          "expert_embed")),
+        })
+    if cfg.num_shared_experts:
+        sh_ff = cfg.num_shared_experts * d_ff
+        specs.update({
+            "sh_gate": Spec((d, sh_ff), ("embed", "mlp")),
+            "sh_up": Spec((d, sh_ff), ("embed", "mlp")),
+            "sh_down": Spec((sh_ff, d), ("mlp", "embed")),
+        })
+    return specs
+
+
+def _capacity(tokens: int, k: int, num_experts: int, cf: float) -> int:
+    return max(4, int(math.ceil(cf * tokens * k / num_experts)))
+
+
+def _route(x_flat, router_w, k: int):
+    """x_flat [T,d] -> (weights [T,k], idx [T,k], probs [T,E])."""
+    logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32), router_w)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, k)
+    weights = weights / jnp.maximum(jnp.sum(weights, axis=-1, keepdims=True), 1e-9)
+    return weights, idx, probs
+
+
+def _expert_ffn(p, xe):
+    """xe [E, C, d] -> [E, C, d] (per-expert SwiGLU).
+
+    int8 path: scales are per output channel, so they commute with the
+    contraction — apply them AFTER the dot (x @ q)·s, keeping the weight
+    read int8 (the matmul consumes the int8 operand directly)."""
+    dt = xe.dtype
+    if "w_gate_q" in p:
+        g = jnp.einsum("ecd,edf->ecf", xe, p["w_gate_q"].astype(dt))
+        g = g * p["w_gate_s"].astype(dt)
+        u = jnp.einsum("ecd,edf->ecf", xe, p["w_up_q"].astype(dt))
+        u = u * p["w_up_s"].astype(dt)
+        y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u,
+                       p["w_down_q"].astype(dt))
+        return y * p["w_down_s"].astype(dt)
+    g = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"].astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", xe, p["w_up"].astype(dt))
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, p["w_down"].astype(dt))
+
+
+def _dispatch_compute_combine(p, x_flat, weights, idx, *, e_start: int,
+                              e_local: int, capacity: int, k: int):
+    """Sort-based capacity dispatch restricted to experts [e_start, e_start+e_local)."""
+    T, d = x_flat.shape
+    flat_e = idx.reshape(-1)                       # [T*k]
+    flat_w = weights.reshape(-1)
+    order = jnp.argsort(flat_e)
+    se = flat_e[order]
+    sw = flat_w[order]
+    stok = order // k
+    counts = jnp.bincount(se, length=p["router"].shape[1])
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(T * k) - starts[se]
+    le = se - e_start
+    keep = (pos < capacity) & (le >= 0) & (le < e_local)
+    buf = jnp.where(keep, le * capacity + pos, e_local * capacity)  # OOB -> drop
+    xe = jnp.zeros((e_local * capacity, d), x_flat.dtype)
+    xe = xe.at[buf].set(x_flat[stok], mode="drop")
+    ye = _expert_ffn(p, xe.reshape(e_local, capacity, d)).reshape(-1, d)
+    contrib = ye.at[jnp.where(keep, buf, e_local * capacity - 1)].get(mode="clip")
+    contrib = contrib * (sw * keep).astype(contrib.dtype)[:, None]
+    y = jnp.zeros((T, d), x_flat.dtype).at[stok].add(contrib)
+    return y
+
+
+def _aux_loss(probs, idx, num_experts: int):
+    """Load-balance loss: E * sum_e f_e * p_e (per token block)."""
+    T, k = idx.shape
+    f = jnp.zeros((num_experts,), jnp.float32).at[idx.reshape(-1)].add(1.0)
+    f = f / (T * k)
+    pbar = jnp.mean(probs, axis=0)
+    return num_experts * jnp.sum(f * pbar)
+
+
+def _moe_local(p, x, cfg, d_ff, *, axis_name=None, axis_index=0, axis_size=1,
+               data_axes=()):
+    """Body shared by the single-device and shard_map paths.  x [B,S,d]."""
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    x_flat = x.reshape(B * S, d)
+    weights, idx, probs = _route(x_flat, p["router"], k)
+    e_local = E // axis_size
+    cap = _capacity(B * S, k, E, cfg.capacity_factor)
+    y = _dispatch_compute_combine(
+        p, x_flat, weights, idx,
+        e_start=axis_index * e_local, e_local=e_local, capacity=cap, k=k)
+    aux = _aux_loss(probs, idx, E)
+    if axis_name is not None:
+        y = jax.lax.psum(y, axis_name)
+        if data_axes:
+            aux = jax.lax.pmean(aux, data_axes)
+    return y.reshape(B, S, d), aux
+
+
+def moe_apply(p, x, ctx: ShardCtx, cfg, d_ff: int):
+    """Returns (out [B,S,d], aux_loss scalar).  Residual added by caller."""
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    mesh = ctx.mesh
+    if mesh is not None and "model" in mesh.axis_names and \
+            mesh.devices.shape[list(mesh.axis_names).index("model")] > 1 and \
+            cfg.num_experts % mesh.devices.shape[list(mesh.axis_names).index("model")] == 0:
+        data_axes = tuple(a for a in mesh.axis_names if a != "model")
+        msize = mesh.devices.shape[list(mesh.axis_names).index("model")]
+
+        wkeys = [k_ for k_ in p
+                 if k_.startswith(("w_gate", "w_up", "w_down"))]
+        expert_p = {"router": P(None, None)}
+        expert_p.update({k_: P("model", None, None) for k_ in wkeys})
+        # cast to compute dtype *before* the shard_map boundary so the FSDP
+        # all-gather over "data" moves bf16, not fp32 (halves collective
+        # bytes); int8 weights and fp32 scales pass through unchanged
+        def _pre(k_):
+            v = p[k_]
+            if k_ == "router" or v.dtype == jnp.int8 or k_.endswith("_s"):
+                return v
+            return v.astype(h.dtype)
+        routed = {k_: _pre(k_) for k_ in ["router"] + wkeys}
+
+        def body(rp, xb):
+            ai = jax.lax.axis_index("model")
+            y, aux = _moe_local(rp, xb, cfg, d_ff, axis_name="model",
+                                axis_index=ai, axis_size=msize,
+                                data_axes=data_axes)
+            return y, aux
+
+        # shape-aware: batch=1 decode degrades to replicated token blocks
+        from repro.utils.sharding import make_spec as _mk
+        batch_spec = _mk(("batch", None, None), h.shape, mesh, ctx.rules)
+        y, aux = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(expert_p, batch_spec),
+            out_specs=(batch_spec, P()),
+            check_vma=False,
+        )(routed, h)
+    else:
+        y, aux = _moe_local(p, h, cfg, d_ff)
+    if cfg.num_shared_experts:
+        dt = h.dtype
+        g = jnp.einsum("bsd,df->bsf", h, p["sh_gate"].astype(dt))
+        u = jnp.einsum("bsd,df->bsf", h, p["sh_up"].astype(dt))
+        y = y + jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u,
+                           p["sh_down"].astype(dt))
+    return y, aux * cfg.router_aux_weight

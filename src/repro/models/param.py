@@ -1,0 +1,80 @@
+"""Parameter-spec system ("nn-lite").
+
+Models declare their parameters as nested dicts of ``Spec`` leaves — shape,
+*logical* sharding axes, initializer.  From one spec tree we derive:
+
+  * ``init_tree``      — materialized parameters (per-leaf PRNG split)
+  * ``abstract_tree``  — ShapeDtypeStructs for ``.lower()`` dry-runs
+  * ``axes_tree``      — logical-axes pytree for the sharding rules
+  * ``stack``          — add a leading scan ("layers") dimension
+
+Keeping init/abstract/axes derived from a single source of truth is what
+makes the 512-device dry-run and the CPU smoke tests share model code.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Spec(NamedTuple):
+    shape: tuple
+    axes: tuple                   # logical axis names, len == len(shape)
+    init: str = "normal"          # normal | zeros | ones | embed | scaled
+    scale: float = 0.0            # 0 -> 1/sqrt(fan_in)
+    dtype: Any = None             # None -> model param dtype
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def _fan_in(shape: tuple) -> int:
+    if len(shape) == 0:
+        return 1
+    if len(shape) == 1:
+        return shape[0]
+    return math.prod(shape[:-1])
+
+
+def _init_leaf(spec: Spec, key, default_dtype) -> jax.Array:
+    dtype = jnp.dtype(spec.dtype or default_dtype)
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if jnp.issubdtype(dtype, jnp.integer):
+        # quantized weights: small symmetric int range
+        return jax.random.randint(key, spec.shape, -16, 17, jnp.int32) \
+            .astype(dtype)
+    if spec.init == "embed":
+        return jax.random.normal(key, spec.shape, dtype) * 0.02
+    scale = spec.scale if spec.scale else 1.0 / math.sqrt(max(_fan_in(spec.shape), 1))
+    return jax.random.normal(key, spec.shape, dtype) * jnp.asarray(scale, dtype)
+
+
+def init_tree(specs, key, default_dtype=jnp.float32):
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out = [_init_leaf(s, k, default_dtype) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_tree(specs, default_dtype=jnp.float32):
+    def _one(s: Spec):
+        return jax.ShapeDtypeStruct(s.shape, s.dtype or default_dtype)
+    return jax.tree.map(_one, specs, is_leaf=is_spec)
+
+
+def axes_tree(specs):
+    return jax.tree.map(lambda s: tuple(s.axes), specs, is_leaf=is_spec)
+
+
+def stack(specs, n: int):
+    """Add a leading scan dimension of length `n` (logical axis "layers")."""
+    def _one(s: Spec):
+        return Spec((n, *s.shape), ("layers", *s.axes), s.init, s.scale, s.dtype)
+    return jax.tree.map(_one, specs, is_leaf=is_spec)

@@ -1,0 +1,111 @@
+"""Layer plan: a per-layer description of every architecture's stack, plus a
+compiler that folds the plan into *scanned stages*.
+
+Heterogeneous stacks (gemma3's 5 local : 1 global, Llama-4's interleaved
+MoE + chunked attention, DeepSeek's first-k-dense, xLSTM's [7:1] mLSTM/sLSTM,
+Llama-3.2-Vision's (4 self + 1 cross) groups) compile into a handful of
+`lax.scan`s over *periodic groups*, so HLO size — and therefore 512-device
+compile time — is O(#distinct stage patterns), not O(num_layers), while
+parameter memory stays exact (no dummy dense weights on MoE layers or
+vice versa).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    kind: str = "attn"       # attn | hymba | mlstm | slstm
+    attn: str = "gqa"        # gqa | mla | none
+    cross: str = "none"      # none | only (cross replaces self) | both
+    causal: bool = True
+    window: int = 0          # 0 = full attention
+    ffn: str = "dense"       # dense | moe | none
+    d_ff: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    pattern: tuple            # tuple[LayerPlan, ...]
+    repeats: int
+
+
+def _is_global(cfg, i: int) -> bool:
+    if cfg.global_layers:
+        return i in cfg.global_layers
+    if cfg.window_pattern:
+        return (i % cfg.window_pattern) == cfg.window_pattern - 1
+    return False
+
+
+def build_plan(cfg) -> list:
+    """Decoder-stack plan for one architecture config."""
+    plans = []
+    for i in range(cfg.num_layers):
+        window = 0
+        if cfg.window_size:
+            window = 0 if _is_global(cfg, i) else cfg.window_size
+
+        if cfg.block_type == "xlstm":
+            kind = "slstm" if (cfg.slstm_every and
+                               (i % cfg.slstm_every) == cfg.slstm_every - 1) else "mlstm"
+            plans.append(LayerPlan(kind=kind, attn="none", ffn="none"))
+            continue
+        if cfg.block_type == "hybrid":
+            plans.append(LayerPlan(kind="hymba", attn="gqa", window=window,
+                                   ffn="dense", d_ff=cfg.d_ff))
+            continue
+
+        # transformer layer: ffn flavor
+        if cfg.num_experts and i >= cfg.first_k_dense and \
+                (i % cfg.moe_layer_period) == cfg.moe_layer_period - 1:
+            ffn, d_ff = "moe", cfg.resolved_moe_d_ff
+        elif cfg.num_experts and i < cfg.first_k_dense:
+            ffn, d_ff = "dense", cfg.resolved_dense_d_ff
+        else:
+            ffn, d_ff = "dense", cfg.d_ff
+
+        cross = "none"
+        if cfg.cross_attn_period and \
+                (i % cfg.cross_attn_period) == cfg.cross_attn_period - 1:
+            cross = "only"
+        elif cfg.encoder_layers:      # whisper decoder: self + cross each layer
+            cross = "both"
+
+        plans.append(LayerPlan(kind="attn", attn=cfg.attention, cross=cross,
+                               window=window, ffn=ffn, d_ff=d_ff))
+    return plans
+
+
+def encoder_plan(cfg) -> list:
+    """Bidirectional encoder stack (whisper)."""
+    return [LayerPlan(kind="attn", attn="gqa", causal=False,
+                      ffn="dense", d_ff=cfg.d_ff)
+            for _ in range(cfg.encoder_layers)]
+
+
+def compile_plan(plans: list, max_period: int = 12) -> list:
+    """Greedy periodic folding: at each position pick the (period, repeats)
+    with maximal coverage; singleton stages fall out naturally."""
+    stages: list = []
+    i, n = 0, len(plans)
+    while i < n:
+        best_p, best_m = 0, 0
+        for p in range(1, min(max_period, n - i) + 1):
+            m = 1
+            while i + (m + 1) * p <= n and \
+                    plans[i + m * p: i + (m + 1) * p] == plans[i: i + p]:
+                m += 1
+            if m >= 2 and (p * m > best_p * best_m or
+                           (p * m == best_p * best_m and p < best_p)):
+                best_p, best_m = p, m
+        if best_m == 0:
+            # no periodic fold here: emit a run of identical layers (>=1)
+            run = 1
+            while i + run < n and plans[i + run] == plans[i]:
+                run += 1
+            best_p, best_m = 1, run
+        stages.append(Stage(tuple(plans[i:i + best_p]), best_m))
+        i += best_p * best_m
+    return stages

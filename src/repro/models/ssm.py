@@ -1,0 +1,356 @@
+"""Recurrent sequence mixers: Mamba-style selective SSM (Hymba's parallel
+heads), and xLSTM's mLSTM / sLSTM blocks.
+
+TPU adaptation notes (see DESIGN.md §3): the CUDA selective-scan kernel is
+replaced by a *chunked* linear recurrence — `lax.scan` over chunks with a
+`lax.associative_scan` inside each chunk.  This keeps the HLO small (one
+while loop), bounds live memory to one chunk of states, and exposes MXU-
+sized einsums per chunk — the standard TPU formulation of linear-recurrence
+models (Mamba-2 / GLA / mLSTM chunkwise).  sLSTM has a *non-linear*
+recurrence (it cannot be chunked) and runs as a plain `lax.scan` over time —
+the paper's own observation; we note the throughput consequence in the
+roofline analysis.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ShardCtx, rmsnorm, rmsnorm_spec
+from repro.models.param import Spec
+
+# ---------------------------------------------------------------------------
+# shared helpers
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv: x [B,S,C], w [K,C], b [C]."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, k:k + x.shape[1], :] * w[k] for k in range(K))
+    return out + b
+
+
+def _chunked_linear_scan(a, b, h0, chunk: int):
+    """h_t = a_t * h_{t-1} + b_t  over axis 1, chunked.
+
+    a, b: [B, S, ...]; h0: [B, ...].  Returns (h_all [B,S,...], h_last)."""
+    B, S = a.shape[:2]
+    ck = min(chunk, S)
+    if S % ck:
+        ck = S  # smoke shapes: single chunk
+    nc = S // ck
+    a = a.reshape(B, nc, ck, *a.shape[2:])
+    b = b.reshape(B, nc, ck, *b.shape[2:])
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return ar * al, ar * bl + br
+
+    def step(h, xs):
+        ac, bc = xs  # [B, ck, ...]
+        P, Q = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        h_all = P * h[:, None] + Q
+        return h_all[:, -1], h_all
+
+    h_last, h_chunks = jax.lax.scan(
+        step, h0, (jnp.moveaxis(a, 1, 0), jnp.moveaxis(b, 1, 0)))
+    h_all = jnp.moveaxis(h_chunks, 0, 1).reshape(B, S, *h0.shape[1:])
+    return h_all, h_last
+
+
+# ---------------------------------------------------------------------------
+# Mamba-style selective SSM mixer
+
+
+def _dt_rank(d: int) -> int:
+    return max(1, math.ceil(d / 16))
+
+
+def mamba_specs(cfg) -> dict:
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    N, K, r = cfg.ssm_state, cfg.ssm_conv, _dt_rank(d)
+    return {
+        "norm": rmsnorm_spec(d),
+        "w_in": Spec((d, 2 * d_in), ("embed", "mlp")),
+        "conv_w": Spec((K, d_in), ("conv", "mlp")),
+        "conv_b": Spec((d_in,), ("mlp",), init="zeros"),
+        "w_bdt": Spec((d_in, r + 2 * N), ("mlp", None)),
+        "w_dt": Spec((r, d_in), (None, "mlp")),
+        "dt_bias": Spec((d_in,), ("mlp",), init="zeros"),
+        "A_log": Spec((d_in, N), ("mlp", "ssm_state"), init="ones"),
+        "D": Spec((d_in,), ("mlp",), init="ones"),
+        "w_out": Spec((d_in, d), ("mlp", "embed")),
+    }
+
+
+def _mamba_gates(p, xs, cfg):
+    r, N = _dt_rank(cfg.d_model), cfg.ssm_state
+    bdt = jnp.einsum("bsc,ce->bse", xs, p["w_bdt"].astype(xs.dtype))
+    dtr, Bm, Cm = bdt[..., :r], bdt[..., r:r + N], bdt[..., r + N:]
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rc->bsc", dtr, p["w_dt"].astype(xs.dtype))
+        + p["dt_bias"].astype(xs.dtype)).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt[..., None] * A)                               # [B,S,C,N]
+    b = (dt * xs.astype(jnp.float32))[..., None] * Bm.astype(jnp.float32)[:, :, None, :]
+    return a, b, Cm
+
+
+def mamba_forward(p, x, ctx: ShardCtx, cfg, chunk: int = 128, want_state=False):
+    """x [B,S,d] -> y [B,S,d] (includes its own pre-norm)."""
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    xz = jnp.einsum("bsd,dc->bsc", h, p["w_in"].astype(h.dtype))
+    d_in = xz.shape[-1] // 2
+    xs0, z = xz[..., :d_in], xz[..., d_in:]
+    xs = jax.nn.silu(_causal_conv(xs0, p["conv_w"].astype(h.dtype),
+                                  p["conv_b"].astype(h.dtype)))
+    a, b, Cm = _mamba_gates(p, xs, cfg)
+    h0 = jnp.zeros((x.shape[0], d_in, cfg.ssm_state), jnp.float32)
+    hs, h_last = _chunked_linear_scan(a, b, h0, chunk)
+    y = jnp.einsum("bscn,bsn->bsc", hs, Cm.astype(jnp.float32))
+    y = y + p["D"].astype(jnp.float32) * xs.astype(jnp.float32)
+    y = (y.astype(h.dtype) * jax.nn.silu(z))
+    out = jnp.einsum("bsc,cd->bsd", y, p["w_out"].astype(h.dtype))
+    state = None
+    if want_state:
+        K = cfg.ssm_conv
+        tail = xs0[:, -(K - 1):] if xs0.shape[1] >= K - 1 else jnp.pad(
+            xs0, ((0, 0), (K - 1 - xs0.shape[1], 0), (0, 0)))
+        state = {"conv": tail.astype(jnp.dtype(cfg.compute_dtype)), "h": h_last}
+    return out, state
+
+
+def mamba_cache_specs(cfg, batch: int) -> dict:
+    d_in = cfg.ssm_expand * cfg.d_model
+    return {
+        "conv": Spec((batch, cfg.ssm_conv - 1, d_in), ("batch", None, "mlp"),
+                     init="zeros", dtype=jnp.dtype(cfg.compute_dtype)),
+        "h": Spec((batch, d_in, cfg.ssm_state), ("batch", "mlp", "ssm_state"),
+                  init="zeros", dtype=jnp.float32),
+    }
+
+
+def mamba_decode(p, x, cache, ctx: ShardCtx, cfg):
+    """x [B,1,d]; cache {conv [B,K-1,C], h [B,C,N]}."""
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    xz = jnp.einsum("bsd,dc->bsc", h, p["w_in"].astype(h.dtype))
+    d_in = xz.shape[-1] // 2
+    xs, z = xz[..., :d_in], xz[..., d_in:]
+    window = jnp.concatenate([cache["conv"].astype(xs.dtype), xs], axis=1)
+    w = p["conv_w"].astype(xs.dtype)
+    xs = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, w)
+                     + p["conv_b"].astype(xs.dtype))[:, None]
+    a, b, Cm = _mamba_gates(p, xs, cfg)
+    h_new = a[:, 0] * cache["h"] + b[:, 0]
+    y = jnp.einsum("bcn,bn->bc", h_new, Cm[:, 0].astype(jnp.float32))
+    y = y + p["D"].astype(jnp.float32) * xs[:, 0].astype(jnp.float32)
+    y = (y[:, None].astype(h.dtype) * jax.nn.silu(z))
+    out = jnp.einsum("bsc,cd->bsd", y, p["w_out"].astype(h.dtype))
+    return out, {"conv": window[:, 1:].astype(cache["conv"].dtype), "h": h_new}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix-memory block) — stabilized chunkwise parallel form
+
+
+def mlstm_specs(cfg) -> dict:
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    NH = cfg.num_heads
+    dk = d_in // NH
+    return {
+        "norm": rmsnorm_spec(d),
+        "w_in": Spec((d, 2 * d_in), ("embed", "mlp")),
+        "wq": Spec((d_in, NH, dk), ("mlp", "heads", "head_dim")),
+        "wk": Spec((d_in, NH, dk), ("mlp", "heads", "head_dim")),
+        "wv": Spec((d_in, NH, dk), ("mlp", "heads", "head_dim")),
+        "w_if": Spec((d_in, 2 * NH), ("mlp", "heads")),
+        "b_if": Spec((2 * NH,), ("heads",), init="zeros"),
+        "out_norm": Spec((d_in,), ("mlp",), init="ones"),
+        "w_out": Spec((d_in, d), ("mlp", "embed")),
+    }
+
+
+def _mlstm_qkvif(p, h, cfg):
+    xz = jnp.einsum("bsd,dc->bsc", h, p["w_in"].astype(h.dtype))
+    d_in = xz.shape[-1] // 2
+    xi, z = xz[..., :d_in], xz[..., d_in:]
+    q = jnp.einsum("bsc,chk->bshk", xi, p["wq"].astype(h.dtype))
+    k = jnp.einsum("bsc,chk->bshk", xi, p["wk"].astype(h.dtype))
+    v = jnp.einsum("bsc,chk->bshk", xi, p["wv"].astype(h.dtype))
+    gf = jnp.einsum("bsc,cg->bsg", xi, p["w_if"].astype(h.dtype)) + p["b_if"].astype(h.dtype)
+    NH = cfg.num_heads
+    logi = gf[..., :NH].astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(gf[..., NH:].astype(jnp.float32))
+    dk = q.shape[-1]
+    return q / math.sqrt(dk), k, v, logi, logf, z
+
+
+def mlstm_forward(p, x, ctx: ShardCtx, cfg, chunk: int = 128, want_state=False):
+    B, S, _ = x.shape
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    q, k, v, logi, logf, z = _mlstm_qkvif(p, h, cfg)
+    NH, dk = q.shape[2], q.shape[3]
+    ck = min(chunk, S)
+    if S % ck:
+        ck = S
+    nc = S // ck
+
+    def resh(t):
+        return jnp.moveaxis(t.reshape(B, nc, ck, *t.shape[2:]), 1, 0)
+
+    qc, kc, vc, lic, lfc = map(resh, (q, k, v, logi, logf))
+    tri = jnp.tril(jnp.ones((ck, ck), bool))
+
+    def step(carry, xs):
+        C, n, m = carry                      # [B,NH,dk,dk], [B,NH,dk], [B,NH]
+        qb, kb, vb, li, lf = xs              # [B,ck,...]
+        F = jnp.cumsum(lf, axis=1)           # [B,ck,NH] inclusive
+        g = li - F
+        G = jax.lax.cummax(g, axis=1)
+        m_rows = F + jnp.maximum(m[:, None], G)          # [B,ck,NH]
+        qf, kf, vf = (t.astype(jnp.float32) for t in (qb, kb, vb))
+        # intra-chunk
+        D = jnp.exp(F[:, :, None] + g[:, None, :] - m_rows[:, :, None])  # [B,i,j,NH]
+        D = jnp.where(tri[None, :, :, None], D, 0.0)
+        s = jnp.einsum("bihk,bjhk->bijh", qf, kf) * D
+        num = jnp.einsum("bijh,bjhv->bihv", s, vf)
+        nvec = jnp.einsum("bijh,bjhk->bihk", D, kf)
+        # inter-chunk
+        e = jnp.exp(F + m[:, None] - m_rows)             # [B,ck,NH]
+        num = num + e[..., None] * jnp.einsum("bihk,bhkv->bihv", qf, C)
+        nvec = nvec + e[..., None] * n[:, None]
+        denom = jnp.maximum(jnp.abs(jnp.einsum("bihk,bihk->bih", qf, nvec)),
+                            jnp.exp(-m_rows))
+        hb = num / denom[..., None]                      # [B,ck,NH,dk]
+        # state update
+        F_last = F[:, -1]                                # [B,NH]
+        m_new = F_last + jnp.maximum(m, G[:, -1])
+        sc_old = jnp.exp(m + F_last - m_new)
+        w_j = jnp.exp(F_last[:, None] + g - m_new[:, None])  # [B,ck,NH]
+        C_new = sc_old[..., None, None] * C + jnp.einsum(
+            "bjh,bjhk,bjhv->bhkv", w_j, kf, vf)
+        n_new = sc_old[..., None] * n + jnp.einsum("bjh,bjhk->bhk", w_j, kf)
+        return (C_new, n_new, m_new), hb
+
+    C0 = jnp.zeros((B, NH, dk, dk), jnp.float32)
+    n0 = jnp.zeros((B, NH, dk), jnp.float32)
+    m0 = jnp.full((B, NH), -1e30, jnp.float32)
+    carry, hs = jax.lax.scan(step, (C0, n0, m0), (qc, kc, vc, lic, lfc))
+    y = jnp.moveaxis(hs, 0, 1).reshape(B, S, NH * dk).astype(h.dtype)
+    y = rmsnorm(y, p["out_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = jnp.einsum("bsc,cd->bsd", y, p["w_out"].astype(h.dtype))
+    state = {"C": carry[0], "n": carry[1], "m": carry[2]} if want_state else None
+    return out, state
+
+
+def mlstm_cache_specs(cfg, batch: int) -> dict:
+    d_in = cfg.ssm_expand * cfg.d_model
+    NH = cfg.num_heads
+    dk = d_in // NH
+    return {
+        "C": Spec((batch, NH, dk, dk), ("batch", "heads", "head_dim", None),
+                  init="zeros", dtype=jnp.float32),
+        "n": Spec((batch, NH, dk), ("batch", "heads", "head_dim"),
+                  init="zeros", dtype=jnp.float32),
+        "m": Spec((batch, NH), ("batch", "heads"), init="zeros", dtype=jnp.float32),
+    }
+
+
+def mlstm_decode(p, x, cache, ctx: ShardCtx, cfg):
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    q, k, v, logi, logf, z = _mlstm_qkvif(p, h, cfg)
+    qf, kf, vf = (t[:, 0].astype(jnp.float32) for t in (q, k, v))  # [B,NH,dk]
+    li, lf = logi[:, 0], logf[:, 0]                                 # [B,NH]
+    C, n, m = cache["C"], cache["n"], cache["m"]
+    m_new = jnp.maximum(lf + m, li)
+    fp = jnp.exp(lf + m - m_new)
+    ip = jnp.exp(li - m_new)
+    C_new = fp[..., None, None] * C + ip[..., None, None] * jnp.einsum(
+        "bhk,bhv->bhkv", kf, vf)
+    n_new = fp[..., None] * n + ip[..., None] * kf
+    num = jnp.einsum("bhk,bhkv->bhv", qf, C_new)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qf, n_new)),
+                        jnp.exp(-m_new))
+    hb = (num / denom[..., None])[:, None]            # [B,1,NH,dk]
+    B = x.shape[0]
+    y = hb.reshape(B, 1, -1).astype(h.dtype)
+    y = rmsnorm(y, p["out_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = jnp.einsum("bsc,cd->bsd", y, p["w_out"].astype(h.dtype))
+    return out, {"C": C_new, "n": n_new, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar memory, non-linear recurrence -> sequential scan)
+
+
+def slstm_specs(cfg) -> dict:
+    d = cfg.d_model
+    NH = cfg.num_heads
+    dh = d // NH
+    return {
+        "norm": rmsnorm_spec(d),
+        "w_x": Spec((d, 4 * d), ("embed", "mlp")),
+        "r": Spec((NH, dh, 4 * dh), ("heads", "head_dim", None)),
+        "b": Spec((4 * d,), ("mlp",), init="zeros"),
+        "w_out": Spec((d, d), ("embed", "embed")),
+    }
+
+
+def _slstm_step(p, cfg, carry, x_t):
+    """x_t [B, 4d] precomputed input projection."""
+    c, n, hprev, m = carry
+    B, d = hprev.shape
+    NH = cfg.num_heads
+    dh = d // NH
+    rec = jnp.einsum("bhk,hkg->bhg", hprev.reshape(B, NH, dh).astype(jnp.float32),
+                     p["r"].astype(jnp.float32))          # [B, NH, 4*dh]
+    # match the i|f|z|o block layout of w_x: [B,NH,4,dh] -> [B,4,NH*dh]
+    rec = rec.reshape(B, NH, 4, dh).transpose(0, 2, 1, 3).reshape(B, 4 * d)
+    raw = x_t.astype(jnp.float32) + rec + p["b"].astype(jnp.float32)
+    i_r, f_r, z_r, o_r = jnp.split(raw, 4, axis=-1)
+    m_new = jnp.maximum(f_r + m, i_r)
+    ip = jnp.exp(i_r - m_new)
+    fp = jnp.exp(f_r + m - m_new)
+    c_new = fp * c + ip * jnp.tanh(z_r)
+    n_new = fp * n + ip
+    h_new = jax.nn.sigmoid(o_r) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_forward(p, x, ctx: ShardCtx, cfg, want_state=False):
+    B, S, d = x.shape
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    xw = jnp.einsum("bsd,dg->bsg", h, p["w_x"].astype(h.dtype))
+    zeros = jnp.zeros((B, d), jnp.float32)
+    carry0 = (zeros, zeros, zeros, jnp.full((B, d), -1e30, jnp.float32))
+    carry, hs = jax.lax.scan(lambda c, xt: _slstm_step(p, cfg, c, xt),
+                             carry0, jnp.moveaxis(xw, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(h.dtype)
+    out = jnp.einsum("bsd,de->bse", y, p["w_out"].astype(h.dtype))
+    state = None
+    if want_state:
+        state = {"c": carry[0], "n": carry[1], "h": carry[2], "m": carry[3]}
+    return out, state
+
+
+def slstm_cache_specs(cfg, batch: int) -> dict:
+    d = cfg.d_model
+    ax = ("batch", "embed")
+    return {k: Spec((batch, d), ax, init="zeros", dtype=jnp.float32)
+            for k in ("c", "n", "h", "m")}
+
+
+def slstm_decode(p, x, cache, ctx: ShardCtx, cfg):
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    xw = jnp.einsum("bsd,dg->bsg", h, p["w_x"].astype(h.dtype))
+    carry = (cache["c"], cache["n"], cache["h"], cache["m"])
+    (c, n, hh, m), h_new = _slstm_step(p, cfg, carry, xw[:, 0])
+    y = h_new[:, None].astype(h.dtype)
+    out = jnp.einsum("bsd,de->bse", y, p["w_out"].astype(h.dtype))
+    return out, {"c": c, "n": n, "h": hh, "m": m}

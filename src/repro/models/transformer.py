@@ -1,0 +1,391 @@
+"""Unified model: every assigned architecture is an instance of this class,
+assembled from the layer plan (plan.py) into scanned stages.
+
+Public surface:
+    Model(cfg)
+      .param_specs() / .init(key) / .abstract_params() / .param_axes()
+      .forward(params, batch, ctx, want_cache, cache_len) -> (logits, aux, caches)
+      .loss(params, batch, ctx) -> (scalar, metrics)
+      .cache_specs(batch, cache_len) -> spec tree for decode caches
+      .decode_step(params, caches, tokens, pos, ctx) -> (logits, caches)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import param as pm
+from repro.models.attention import (
+    gqa_cache_specs, gqa_decode, gqa_prefill, gqa_specs,
+    mla_cache_specs, mla_decode, mla_prefill, mla_specs,
+)
+from repro.models.layers import (
+    NO_SHARD, ShardCtx, embed_apply, embed_specs, mlp_apply, mlp_specs,
+    rmsnorm, rmsnorm_spec, unembed_apply,
+)
+from repro.models.moe import moe_apply, moe_specs
+from repro.models.plan import LayerPlan, Stage, build_plan, compile_plan, encoder_plan
+from repro.models.ssm import (
+    mamba_cache_specs, mamba_decode, mamba_forward, mamba_specs,
+    mlstm_cache_specs, mlstm_decode, mlstm_forward, mlstm_specs,
+    slstm_cache_specs, slstm_decode, slstm_forward, slstm_specs,
+)
+from repro.models.param import Spec
+
+
+class Model:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.plan = build_plan(cfg)
+        self.stages = compile_plan(self.plan)
+        self.enc_stages = (compile_plan(encoder_plan(cfg))
+                           if cfg.encoder_layers else [])
+
+    # ------------------------------------------------------------------
+    # parameter specs
+
+    def _layer_specs(self, plan: LayerPlan) -> dict:
+        cfg = self.cfg
+        s: dict = {}
+        if plan.kind == "attn":
+            if plan.cross != "only":
+                s["attn"] = mla_specs(cfg) if plan.attn == "mla" else gqa_specs(cfg)
+            if plan.cross != "none":
+                s["cross"] = gqa_specs(cfg, cross=True)
+            if plan.ffn == "dense":
+                s["mlp"] = mlp_specs(cfg.d_model, plan.d_ff)
+            elif plan.ffn == "moe":
+                s["moe"] = moe_specs(cfg, plan.d_ff)
+        elif plan.kind == "hymba":
+            s["attn"] = gqa_specs(cfg)
+            s["ssm"] = mamba_specs(cfg)
+            s["mlp"] = mlp_specs(cfg.d_model, plan.d_ff)
+        elif plan.kind == "mlstm":
+            s["mlstm"] = mlstm_specs(cfg)
+        elif plan.kind == "slstm":
+            s["slstm"] = slstm_specs(cfg)
+        else:
+            raise ValueError(plan.kind)
+        return s
+
+    def _stage_specs(self, stage: Stage) -> dict:
+        specs = {f"b{i}": self._layer_specs(p) for i, p in enumerate(stage.pattern)}
+        return pm.stack(specs, stage.repeats) if stage.repeats > 1 else \
+            pm.stack(specs, 1)
+
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        specs: dict = {
+            "embed": embed_specs(cfg.vocab_size, cfg.d_model, cfg.tie_embeddings),
+            "final_norm": rmsnorm_spec(cfg.d_model),
+        }
+        for si, st in enumerate(self.stages):
+            specs[f"stage_{si}"] = self._stage_specs(st)
+        if cfg.frontend != "none":
+            specs["projector"] = {
+                "w": Spec((cfg.d_model, cfg.d_model), ("embed", "embed")),
+                "norm": rmsnorm_spec(cfg.d_model),
+            }
+        for si, st in enumerate(self.enc_stages):
+            specs[f"enc_stage_{si}"] = self._stage_specs(st)
+        if self.enc_stages:
+            specs["enc_norm"] = rmsnorm_spec(cfg.d_model)
+        if cfg.mtp:
+            # DeepSeek-V3 MTP: combine head-normed h_i with emb(t_{i+1}),
+            # run one extra block, predict t_{i+2} (depth-1 MTP module)
+            specs["mtp"] = {
+                "proj": Spec((2 * cfg.d_model, cfg.d_model),
+                             ("embed", "embed")),
+                "emb_norm": rmsnorm_spec(cfg.d_model),
+                "h_norm": rmsnorm_spec(cfg.d_model),
+                "final_norm": rmsnorm_spec(cfg.d_model),
+                "block": self._layer_specs(LayerPlan(
+                    kind="attn", attn=cfg.attention, ffn="dense",
+                    d_ff=cfg.resolved_dense_d_ff)),
+            }
+        return specs
+
+    def init(self, key):
+        return pm.init_tree(self.param_specs(), key, self.cfg.pdtype)
+
+    def abstract_params(self):
+        return pm.abstract_tree(self.param_specs(), self.cfg.pdtype)
+
+    def param_axes(self):
+        return pm.axes_tree(self.param_specs())
+
+    # ------------------------------------------------------------------
+    # forward (train / prefill)
+
+    def _apply_layer_fwd(self, plan: LayerPlan, p, x, ctx, positions, memory,
+                         want_cache, cache_len):
+        cfg = self.cfg
+        cache: dict = {}
+        aux = jnp.float32(0.0)
+        if plan.kind == "attn":
+            if plan.cross != "only":
+                if plan.attn == "mla":
+                    a, c = mla_prefill(p["attn"], x, positions, ctx, cfg,
+                                       want_cache=want_cache, cache_len=cache_len)
+                else:
+                    a, c = gqa_prefill(p["attn"], x, positions, ctx, cfg,
+                                       window=plan.window, causal=plan.causal,
+                                       want_cache=want_cache, cache_len=cache_len)
+                x = x + a
+                if want_cache:
+                    cache["attn"] = c
+            if plan.cross != "none":
+                a, c = gqa_prefill(p["cross"], x, positions, ctx, cfg,
+                                   memory=memory, want_cache=want_cache)
+                x = x + a
+                if want_cache:
+                    cache["cross"] = c
+            if plan.ffn == "dense":
+                x = x + mlp_apply(p["mlp"], x, ctx, cfg.norm_eps)
+            elif plan.ffn == "moe":
+                y, aux = moe_apply(p["moe"], x, ctx, cfg, plan.d_ff)
+                x = x + y
+        elif plan.kind == "hymba":
+            a, c = gqa_prefill(p["attn"], x, positions, ctx, cfg,
+                               window=plan.window, want_cache=want_cache,
+                               cache_len=cache_len)
+            s, st = mamba_forward(p["ssm"], x, ctx, cfg, want_state=want_cache)
+            x = x + 0.5 * (a + s)
+            x = x + mlp_apply(p["mlp"], x, ctx, cfg.norm_eps)
+            if want_cache:
+                cache = {"attn": c, "ssm": st}
+        elif plan.kind == "mlstm":
+            y, st = mlstm_forward(p["mlstm"], x, ctx, cfg, want_state=want_cache)
+            x = x + y
+            if want_cache:
+                cache["mlstm"] = st
+        elif plan.kind == "slstm":
+            y, st = slstm_forward(p["slstm"], x, ctx, cfg, want_state=want_cache)
+            x = x + y
+            if want_cache:
+                cache["slstm"] = st
+        return x, (cache if want_cache else None), aux
+
+    def _run_stage_fwd(self, stage: Stage, sp, x, ctx, positions, memory,
+                       want_cache, cache_len):
+        cfg = self.cfg
+
+        def body(carry, xs):
+            xc, aux = carry
+            caches = {}
+            for bi, plan in enumerate(stage.pattern):
+                xc, c, a = self._apply_layer_fwd(
+                    plan, xs[f"b{bi}"], xc, ctx, positions, memory,
+                    want_cache, cache_len)
+                if want_cache:
+                    caches[f"b{bi}"] = c
+                aux = aux + a
+            return (xc, aux), (caches if want_cache else None)
+
+        if cfg.remat == "block":
+            body = jax.checkpoint(body)
+        (x, aux), caches = jax.lax.scan(body, (x, jnp.float32(0.0)), sp)
+        return x, aux, caches
+
+    def _frontend_memory(self, params, batch, ctx):
+        """Project stubbed frontend embeddings; run the encoder for audio."""
+        cfg = self.cfg
+        if cfg.frontend == "none":
+            return None
+        key = "frames" if cfg.frontend == "audio_frames" else "patches"
+        emb = batch[key].astype(cfg.cdtype)
+        pr = params["projector"]
+        mem = rmsnorm(jnp.einsum("bfd,de->bfe", emb, pr["w"].astype(emb.dtype)),
+                      pr["norm"], cfg.norm_eps)
+        if self.enc_stages:
+            pos = jnp.arange(mem.shape[1])
+            for si, st in enumerate(self.enc_stages):
+                mem, _, _ = self._run_stage_fwd(
+                    st, params[f"enc_stage_{si}"], mem, ctx, pos, None,
+                    False, 0)
+            mem = rmsnorm(mem, params["enc_norm"], cfg.norm_eps)
+        return mem
+
+    def _forward_core(self, params, batch, ctx: ShardCtx, *,
+                      want_cache=False, cache_len=0):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = embed_apply(params["embed"], tokens, cfg.cdtype)
+        x = ctx.constrain(x, ("batch", None, None))
+        positions = jnp.arange(tokens.shape[1])
+        memory = self._frontend_memory(params, batch, ctx)
+        aux = jnp.float32(0.0)
+        caches = {}
+        for si, st in enumerate(self.stages):
+            x, a, c = self._run_stage_fwd(st, params[f"stage_{si}"], x, ctx,
+                                          positions, memory, want_cache,
+                                          cache_len)
+            aux = aux + a
+            if want_cache:
+                caches[f"stage_{si}"] = c
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        return x, aux, (caches if want_cache else None)
+
+    def forward(self, params, batch, ctx: ShardCtx = NO_SHARD, *,
+                want_cache=False, cache_len=0):
+        x, aux, caches = self._forward_core(params, batch, ctx,
+                                            want_cache=want_cache,
+                                            cache_len=cache_len)
+        logits = unembed_apply(params["embed"], x, ctx)
+        return logits, aux, caches
+
+    # ------------------------------------------------------------------
+    # loss
+
+    @staticmethod
+    def _ce(logits, labels):
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(
+            logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+        mask = (labels >= 0).astype(jnp.float32)
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        return jnp.sum((lse - ll) * mask) / denom, jnp.sum(mask)
+
+    def _mtp_loss(self, params, batch, x_normed, ctx: ShardCtx):
+        """DeepSeek-V3 depth-1 MTP: predict t_{i+2} from (h_i, emb(t_{i+1}))."""
+        cfg = self.cfg
+        p = params["mtp"]
+        tokens, labels = batch["tokens"], batch["labels"]
+        # emb of the NEXT token (shift left; last position is padding)
+        nxt = jnp.concatenate([tokens[:, 1:], tokens[:, -1:]], axis=1)
+        emb = rmsnorm(embed_apply(params["embed"], nxt, cfg.cdtype),
+                      p["emb_norm"], cfg.norm_eps)
+        h = rmsnorm(x_normed, p["h_norm"], cfg.norm_eps)
+        h = jnp.einsum("bsc,cd->bsd", jnp.concatenate([h, emb], axis=-1),
+                       p["proj"].astype(h.dtype))
+        positions = jnp.arange(tokens.shape[1])
+        plan = LayerPlan(kind="attn", attn=cfg.attention, ffn="dense",
+                         d_ff=cfg.resolved_dense_d_ff)
+        h, _, _ = self._apply_layer_fwd(plan, p["block"], h, ctx, positions,
+                                        None, False, 0)
+        h = rmsnorm(h, p["final_norm"], cfg.norm_eps)
+        logits2 = unembed_apply(params["embed"], h, ctx)
+        # labels shifted left by one = t_{i+2}; mask the final position
+        lbl2 = jnp.concatenate(
+            [labels[:, 1:], jnp.full_like(labels[:, -1:], -1)], axis=1)
+        ce2, _ = self._ce(logits2, lbl2)
+        return ce2
+
+    def loss(self, params, batch, ctx: ShardCtx = NO_SHARD):
+        x, aux, _ = self._forward_core(params, batch, ctx)
+        logits = unembed_apply(params["embed"], x, ctx)
+        labels = batch["labels"]
+        ce, ntok = self._ce(logits, labels)
+        total = ce + aux
+        metrics = {"ce": ce, "aux": aux, "tokens": ntok}
+        if self.cfg.mtp and "mtp" in params:
+            mtp_ce = self._mtp_loss(params, batch, x, ctx)
+            total = total + self.cfg.mtp_weight * mtp_ce
+            metrics["mtp_ce"] = mtp_ce
+        return total, metrics
+
+    # ------------------------------------------------------------------
+    # decode
+
+    def _layer_cache_specs(self, plan: LayerPlan, batch: int, cache_len: int):
+        cfg = self.cfg
+        mem_len = cfg.num_frontend_tokens
+        s: dict = {}
+        if plan.kind == "attn":
+            if plan.cross != "only":
+                s["attn"] = (mla_cache_specs(cfg, batch, cache_len)
+                             if plan.attn == "mla" else
+                             gqa_cache_specs(cfg, batch, cache_len,
+                                             window=plan.window))
+            if plan.cross != "none":
+                s["cross"] = gqa_cache_specs(cfg, batch, cache_len,
+                                             cross_len=mem_len)
+        elif plan.kind == "hymba":
+            s["attn"] = gqa_cache_specs(cfg, batch, cache_len, window=plan.window)
+            s["ssm"] = mamba_cache_specs(cfg, batch)
+        elif plan.kind == "mlstm":
+            s["mlstm"] = mlstm_cache_specs(cfg, batch)
+        elif plan.kind == "slstm":
+            s["slstm"] = slstm_cache_specs(cfg, batch)
+        return s
+
+    def cache_specs(self, batch: int, cache_len: int) -> dict:
+        out = {}
+        for si, st in enumerate(self.stages):
+            layer = {f"b{i}": self._layer_cache_specs(p, batch, cache_len)
+                     for i, p in enumerate(st.pattern)}
+            out[f"stage_{si}"] = pm.stack(layer, st.repeats)
+        return out
+
+    def init_cache(self, batch: int, cache_len: int):
+        return pm.init_tree(self.cache_specs(batch, cache_len), jax.random.PRNGKey(0))
+
+    def abstract_cache(self, batch: int, cache_len: int):
+        return pm.abstract_tree(self.cache_specs(batch, cache_len))
+
+    def cache_axes(self):
+        # shapes are irrelevant for axes; use batch=1, len=1
+        return pm.axes_tree(self.cache_specs(1, 1))
+
+    def _apply_layer_dec(self, plan: LayerPlan, p, x, cache, pos, ctx):
+        cfg = self.cfg
+        new_cache: dict = {}
+        if plan.kind == "attn":
+            if plan.cross != "only":
+                if plan.attn == "mla":
+                    a, new_cache["attn"] = mla_decode(p["attn"], x,
+                                                      cache["attn"], pos, ctx, cfg)
+                else:
+                    a, new_cache["attn"] = gqa_decode(p["attn"], x, cache["attn"],
+                                                      pos, ctx, cfg,
+                                                      window=plan.window)
+                x = x + a
+            if plan.cross != "none":
+                a, new_cache["cross"] = gqa_decode(p["cross"], x, cache["cross"],
+                                                   pos, ctx, cfg, cross=True)
+                x = x + a
+            if plan.ffn == "dense":
+                x = x + mlp_apply(p["mlp"], x, ctx, cfg.norm_eps)
+            elif plan.ffn == "moe":
+                y, _ = moe_apply(p["moe"], x, ctx, cfg, plan.d_ff)
+                x = x + y
+        elif plan.kind == "hymba":
+            a, new_cache["attn"] = gqa_decode(p["attn"], x, cache["attn"], pos,
+                                              ctx, cfg, window=plan.window)
+            s, new_cache["ssm"] = mamba_decode(p["ssm"], x, cache["ssm"], ctx, cfg)
+            x = x + 0.5 * (a + s)
+            x = x + mlp_apply(p["mlp"], x, ctx, cfg.norm_eps)
+        elif plan.kind == "mlstm":
+            y, new_cache["mlstm"] = mlstm_decode(p["mlstm"], x, cache["mlstm"],
+                                                 ctx, cfg)
+            x = x + y
+        elif plan.kind == "slstm":
+            y, new_cache["slstm"] = slstm_decode(p["slstm"], x, cache["slstm"],
+                                                 ctx, cfg)
+            x = x + y
+        return x, new_cache
+
+    def decode_step(self, params, caches, tokens, pos, ctx: ShardCtx = NO_SHARD):
+        """tokens [B,1], pos scalar int32 -> (logits [B,1,V], new caches)."""
+        cfg = self.cfg
+        x = embed_apply(params["embed"], tokens, cfg.cdtype)
+        x = ctx.constrain(x, ("batch", None, None))
+        new_caches = {}
+        for si, st in enumerate(self.stages):
+            def body(xc, xs):
+                sp_g, cache_g = xs
+                ncs = {}
+                for bi, plan in enumerate(st.pattern):
+                    xc, nc = self._apply_layer_dec(plan, sp_g[f"b{bi}"], xc,
+                                                   cache_g[f"b{bi}"], pos, ctx)
+                    ncs[f"b{bi}"] = nc
+                return xc, ncs
+            x, nc = jax.lax.scan(body, x, (params[f"stage_{si}"],
+                                           caches[f"stage_{si}"]))
+            new_caches[f"stage_{si}"] = nc
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = unembed_apply(params["embed"], x, ctx)
+        return logits, new_caches

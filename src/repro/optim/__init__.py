@@ -1,0 +1,2 @@
+from repro.optim.optimizers import adamw, apply_updates, sgd  # noqa: F401
+from repro.optim.schedules import constant, cosine_warmup  # noqa: F401

@@ -1,0 +1,81 @@
+"""Optimizers (optax-lite): pure-JAX SGD(+momentum) and AdamW.
+
+Each optimizer is (init_fn, update_fn):
+    state = init_fn(params)
+    updates, state = update_fn(grads, state, params, step)
+    params = apply_updates(params, updates)
+
+Optimizer states mirror the parameter pytree, so the launch layer shards
+them with the same logical-axis rules as the parameters (ZeRO-style).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+class SGDState(NamedTuple):
+    momentum: object
+
+
+def sgd(lr, momentum: float = 0.0):
+    def init(params):
+        if momentum == 0.0:
+            return SGDState(momentum=None)
+        return SGDState(momentum=jax.tree.map(jnp.zeros_like, params))
+
+    def update(grads, state, params=None, step=0):
+        rate = lr(step) if callable(lr) else lr
+        if momentum == 0.0:
+            return jax.tree.map(lambda g: -rate * g, grads), state
+        mom = jax.tree.map(lambda m, g: momentum * m + g, state.momentum, grads)
+        return jax.tree.map(lambda m: -rate * m, mom), SGDState(momentum=mom)
+
+    return init, update
+
+
+class AdamWState(NamedTuple):
+    m: object
+    v: object
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0):
+    def init(params):
+        zeros = lambda t: jax.tree.map(  # noqa: E731
+            lambda p: jnp.zeros(p.shape, jnp.float32), t)
+        return AdamWState(m=zeros(params), v=zeros(params))
+
+    def update(grads, state, params, step):
+        rate = lr(step) if callable(lr) else lr
+        count = step + 1
+        # moments may be stored in reduced precision (cfg.opt_state_dtype);
+        # the update math always runs in fp32
+        m = jax.tree.map(
+            lambda m_, g: (b1 * m_.astype(jnp.float32)
+                           + (1 - b1) * g.astype(jnp.float32)).astype(m_.dtype),
+            state.m, grads)
+        v = jax.tree.map(
+            lambda v_, g: (b2 * v_.astype(jnp.float32)
+                           + (1 - b2) * jnp.square(g.astype(jnp.float32))
+                           ).astype(v_.dtype),
+            state.v, grads)
+        bc1 = 1 - b1 ** count
+        bc2 = 1 - b2 ** count
+
+        def upd(m_, v_, p):
+            u = (m_.astype(jnp.float32) / bc1) / (
+                jnp.sqrt(v_.astype(jnp.float32) / bc2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return -rate * u
+
+        return jax.tree.map(upd, m, v, params), AdamWState(m=m, v=v)
+
+    return init, update

@@ -1,0 +1,352 @@
+"""Analytic metrics from compiled (post-SPMD) HLO text.
+
+Why not ``compiled.cost_analysis()``?  XLA's HloCostAnalysis visits every
+while-loop body ONCE — for scan-over-layers models (all ten architectures)
+that under-counts FLOPs/bytes by ~num_layers×.  And collective bytes are not
+reported at all.  So the roofline terms are derived here directly from the
+HLO module text:
+
+  * computations are split and a call graph is built (while bodies carry
+    their ``known_trip_count`` as a multiplier; fusions/calls multiply by 1),
+  * **flops**: `dot` ops contribute 2·|result|·|contracted dims| (from the
+    printed operand shapes + contracting dims); elementwise arithmetic
+    contributes |result|; reduces contribute |operand|,
+  * **bytes**: per top-level op (fusion interiors excluded — a fused region
+    is one HBM round trip at its boundary): result bytes + operand bytes,
+  * **collective_bytes**: result-shape bytes of every all-gather /
+    all-reduce / reduce-scatter / all-to-all / collective-permute, with
+    trip-count multipliers applied.
+
+This is a structural model, not a trace: it is exact for MXU flops and for
+collective traffic, and a consistent (slightly pessimistic) proxy for HBM
+traffic.  EXPERIMENTS.md §Roofline documents the methodology.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1,
+    "f8e5m2fnuz": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+_NAME_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_EDGE_RE = re.compile(r"(?:to_apply|condition|body|calls)=%?([\w\.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OP_RE = re.compile(r"=\s*(?:\([^=]*?\)|[a-z][a-z0-9]*\[[0-9,]*\][^ ]*)\s+([a-z][a-z0-9-]*)\(")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "exponential-minus-one", "tanh", "rsqrt", "sqrt", "log",
+    "log-plus-one", "negate", "compare", "select", "and", "or", "xor", "not",
+    "abs", "floor", "ceil", "sign", "logistic", "sine", "cosine", "atan2",
+    "remainder", "clamp",
+}
+_NO_BYTES = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "bitcast-convert", "while", "conditional", "after-all", "opt-barrier",
+    "partition-id", "replica-id", "iota",
+}
+
+
+def _shapes_in(text: str):
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out.append((n, n * _DTYPE_BYTES[dtype], dims))
+    return out
+
+
+def _split_computations(hlo_text: str) -> dict:
+    """{name: [op lines]} using brace-depth tracking (robust to tuples)."""
+    comps: dict[str, list[str]] = {}
+    cur = None
+    depth = 0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            if stripped.endswith("{") and "->" in stripped:
+                m = _NAME_RE.match(line)
+                if m:
+                    cur = m.group(1)
+                    comps[cur] = []
+                    depth = 1
+            continue
+        depth += stripped.count("{") - stripped.count("}")
+        if depth <= 0:
+            cur = None
+            continue
+        comps[cur].append(line)
+    return comps
+
+
+def _line_op(line: str):
+    m = _OP_RE.search(line)
+    return m.group(1) if m else None
+
+
+def _split_lhs_operands(line: str):
+    """Return (result_text, operand_text) around the op call parens."""
+    eq = line.find("=")
+    if eq < 0:
+        return "", ""
+    rest = line[eq + 1:]
+    m = _OP_RE.search(line)
+    if not m:
+        return rest, ""
+    op_start = line.find(m.group(1) + "(", eq)
+    result_text = line[eq + 1: op_start]
+    # operand section: balanced parens after op name
+    i = line.find("(", op_start)
+    depth = 0
+    j = i
+    for j in range(i, len(line)):
+        if line[j] == "(":
+            depth += 1
+        elif line[j] == ")":
+            depth -= 1
+            if depth == 0:
+                break
+    return result_text, line[i + 1: j]
+
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
+def analyze_hlo(hlo_text: str) -> dict:
+    hlo_text = _COMMENT_RE.sub("", hlo_text)   # strip /*index=k*/ comments
+    comps = _split_computations(hlo_text)
+
+    # per-computation symbol tables: instruction name -> (elems, bytes, dims)
+    symtab: dict[str, dict[str, tuple]] = {}
+    for name, lines in comps.items():
+        tab: dict[str, tuple] = {}
+        for line in lines:
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            result_text, _ = _split_lhs_operands(line)
+            shapes = _shapes_in(result_text)
+            if shapes:
+                tab[dm.group(1)] = (sum(s[0] for s in shapes),
+                                    sum(s[1] for s in shapes),
+                                    shapes[0][2])
+        symtab[name] = tab
+
+    per = {}
+    edges: dict[str, list] = defaultdict(list)
+    fusion_interior: set = set()
+    apply_interior: set = set()
+
+    for name, lines in comps.items():
+        flops = 0.0
+        mem = 0.0
+        mem_fused = 0.0
+        coll = defaultdict(float)
+        coll_n = defaultdict(int)
+        coll_ops: list = []
+        mem_ops: list = []
+        tab = symtab[name]
+
+        def _operand_info(operand_text):
+            """Resolve %operand references through the local symbol table.
+            Returns (total_elems, total_bytes, [dims...], [bytes...])."""
+            elems, nbytes, dims, blist = 0, 0, [], []
+            for ref in _OPERAND_RE.findall(operand_text):
+                if ref in tab:
+                    e, b, d = tab[ref]
+                    elems += e
+                    nbytes += b
+                    dims.append(d)
+                    blist.append(b)
+            return elems, nbytes, dims, blist
+
+        for line in lines:
+            op = _line_op(line)
+            if op is None:
+                continue
+            result_text, operand_text = _split_lhs_operands(line)
+            rshapes = _shapes_in(result_text)
+            relems = sum(s[0] for s in rshapes)
+            rbytes = sum(s[1] for s in rshapes)
+
+            # --- call graph
+            if op == "while":
+                trip = _TRIP_RE.search(line)
+                n = int(trip.group(1)) if trip else 1
+                for callee in _EDGE_RE.findall(line):
+                    kind = "body" if f"body={callee}" in line.replace("%", "") \
+                        else "other"
+                    edges[name].append((callee, n if kind == "body" else 1))
+            else:
+                br = _BRANCH_RE.search(line)
+                if br:
+                    for callee in br.group(1).replace("%", "").split(","):
+                        callee = callee.strip()
+                        if callee:
+                            edges[name].append((callee, 1))
+                for callee in _EDGE_RE.findall(line):
+                    edges[name].append((callee, 1))
+                    if op == "fusion":
+                        fusion_interior.add(callee)
+                    elif op in ("reduce", "map", "sort", "reduce-window",
+                                "scatter", "select-and-scatter", "all-reduce",
+                                "reduce-scatter"):
+                        apply_interior.add(callee)
+
+            # --- flops
+            if op == "dot":
+                _, _, odims, _ = _operand_info(operand_text)
+                cm = _CONTRACT_RE.search(line)
+                if odims and cm is not None:
+                    lhs_dims = odims[0].split(",")
+                    contracted = 1
+                    for d in cm.group(1).split(","):
+                        if d and int(d) < len(lhs_dims) and lhs_dims[int(d)]:
+                            contracted *= int(lhs_dims[int(d)])
+                    flops += 2.0 * relems * contracted
+            elif op == "convolution":
+                oelems, _, odims, _ = _operand_info(operand_text)
+                if len(odims) >= 2:
+                    kelems = 1
+                    for d in odims[1].split(","):
+                        if d:
+                            kelems *= int(d)
+                    flops += 2.0 * relems * kelems  # upper bound (depthwise ok)
+            elif op in _ELEMENTWISE:
+                flops += relems
+            elif op in ("reduce", "reduce-window"):
+                oelems, _, _, _ = _operand_info(operand_text)
+                flops += oelems
+
+            # --- collectives
+            for c in _COLLECTIVES:
+                if op == c or op == c + "-start":
+                    coll[c] += rbytes
+                    coll_n[c] += 1
+                    coll_ops.append((c, rbytes, result_text.strip()[:80]))
+                    break
+
+            # --- bytes (top-level ops only; interiors excluded later)
+            # slicing ops touch only the slice, not the whole operand:
+            # dynamic-slice reads+writes |result|; dynamic-update-slice
+            # reads+writes |update| (the base array is aliased in place).
+            if op in ("dynamic-slice", "slice", "gather"):
+                op_mem = 2.0 * rbytes
+            elif op in ("dynamic-update-slice", "scatter", "scatter-add"):
+                _, _, _, blist = _operand_info(operand_text)
+                upd = blist[1] if len(blist) > 1 else rbytes
+                op_mem = 2.0 * upd
+            elif op in _NO_BYTES:
+                op_mem = 0.0
+            else:
+                _, obytes, _, _ = _operand_info(operand_text)
+                op_mem = rbytes + obytes
+            mem += op_mem
+            if "flash_tile" not in line:
+                mem_fused_local = op_mem
+            else:
+                mem_fused_local = 0.0
+            mem_fused += mem_fused_local
+            if op_mem > 0:
+                mem_ops.append((op_mem, op, result_text.strip()[:80]))
+
+        mem_ops.sort(reverse=True)
+        per[name] = dict(flops=flops, mem=mem, mem_fused=mem_fused,
+                         coll=dict(coll), coll_n=dict(coll_n),
+                         coll_ops=coll_ops, mem_ops=mem_ops[:8])
+
+    called = {c for lst in edges.values() for c, _ in lst}
+    roots = [n for n in comps if n not in called]
+    entry = next((n for n in roots if "main" in n), roots[0] if roots else None)
+
+    totals = dict(flops=0.0, mem=0.0, mem_fused=0.0)
+    coll_tot: dict[str, float] = defaultdict(float)
+    coll_cnt: dict[str, int] = defaultdict(int)
+    top_colls: list = []
+    top_mem: list = []
+    stack: set = set()
+
+    def visit(name: str, mult: float):
+        if name in stack or name not in per:
+            return
+        stack.add(name)
+        rec = per[name]
+        totals["flops"] += rec["flops"] * mult
+        if name not in fusion_interior and name not in apply_interior:
+            totals["mem"] += rec["mem"] * mult
+            totals["mem_fused"] += rec["mem_fused"] * mult
+        for k, v in rec["coll"].items():
+            coll_tot[k] += v * mult
+            coll_cnt[k] += int(rec["coll_n"][k] * mult)
+        for c, b, shape in rec["coll_ops"]:
+            top_colls.append((b * mult, c, shape, mult))
+        if name not in fusion_interior and name not in apply_interior:
+            for b, opn, shape in rec["mem_ops"]:
+                top_mem.append((b * mult, opn, shape, mult))
+        for child, factor in edges.get(name, ()):
+            visit(child, mult * factor)
+        stack.discard(name)
+
+    if entry:
+        visit(entry, 1.0)
+
+    top_colls.sort(reverse=True)
+    return {
+        "flops": totals["flops"],
+        "bytes": totals["mem"],
+        # HBM bytes if the flash_tile-tagged score ops stay VMEM-resident
+        # (i.e. the Pallas flash kernel replaces the stock XLA lowering)
+        "bytes_fused": totals["mem_fused"],
+        "collective_bytes": float(sum(coll_tot.values())),
+        "collectives": {k: float(v) for k, v in coll_tot.items()},
+        "collective_counts": dict(coll_cnt),
+        "top_collectives": [
+            {"bytes": int(b), "op": c, "shape": s, "mult": m}
+            for b, c, s, m in top_colls[:8]],
+        "top_mem_ops": [
+            {"bytes": int(b), "op": c, "shape": s, "mult": m}
+            for b, c, s, m in sorted(top_mem, reverse=True)[:8]],
+        "num_computations": len(comps),
+        "entry": entry,
+    }
+
+
+# Back-compat helpers -------------------------------------------------------
+
+def collective_bytes(hlo_text: str) -> dict:
+    a = analyze_hlo(hlo_text)
+    out = dict(a["collectives"])
+    out["total"] = int(a["collective_bytes"])
+    out["counts"] = a["collective_counts"]
+    return out
+
+
+def while_trip_counts(hlo_text: str) -> list:
+    return [int(m) for m in _TRIP_RE.findall(hlo_text)]
+
+
+def count_ops(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))

@@ -1,0 +1,97 @@
+"""Pytree utilities shared across the framework."""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_map(fn: Callable, *trees) -> Any:
+    return jax.tree.map(fn, *trees)
+
+
+def tree_leaves(tree) -> list:
+    return jax.tree.leaves(tree)
+
+
+def num_params(tree) -> int:
+    """Total number of scalar parameters in a pytree of arrays/abstract values."""
+    return int(sum(math.prod(x.shape) for x in jax.tree.leaves(tree)))
+
+
+def num_bytes(tree) -> int:
+    """Total bytes of a pytree of arrays / ShapeDtypeStructs."""
+    total = 0
+    for x in jax.tree.leaves(tree):
+        total += math.prod(x.shape) * jnp.dtype(x.dtype).itemsize
+    return int(total)
+
+
+def tree_zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(tree, s):
+    return jax.tree.map(lambda x: x * s, tree)
+
+
+def tree_weighted_sum(trees: list, weights) -> Any:
+    """sum_i w_i * tree_i  (the FedAvg primitive)."""
+    weights = list(weights)
+    assert len(trees) == len(weights) and trees, "need >=1 tree"
+    out = tree_scale(trees[0], weights[0])
+    for t, w in zip(trees[1:], weights[1:]):
+        out = tree_add(out, tree_scale(t, w))
+    return out
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def tree_cast(tree, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), tree)
+
+
+def flatten_dict(d: dict, prefix: str = "", sep: str = "/") -> dict:
+    """Flatten a nested dict-of-arrays into {'a/b/c': leaf}."""
+    out = {}
+    for k, v in d.items():
+        key = f"{prefix}{sep}{k}" if prefix else str(k)
+        if isinstance(v, dict):
+            out.update(flatten_dict(v, key, sep))
+        else:
+            out[key] = v
+    return out
+
+
+def unflatten_dict(flat: dict, sep: str = "/") -> dict:
+    out: dict = {}
+    for k, v in flat.items():
+        parts = k.split(sep)
+        cur = out
+        for p in parts[:-1]:
+            cur = cur.setdefault(p, {})
+        cur[parts[-1]] = v
+    return out
+
+
+def check_finite(tree, name: str = "tree") -> None:
+    """Host-side NaN/Inf check (for tests and the FL driver)."""
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        arr = np.asarray(leaf)
+        if not np.all(np.isfinite(arr)):
+            key = jax.tree_util.keystr(path)
+            raise FloatingPointError(f"non-finite values in {name}{key}")

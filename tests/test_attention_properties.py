@@ -1,0 +1,85 @@
+"""Hypothesis property tests on the attention core's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import attend
+
+
+def _rand(rs, *shape):
+    return jnp.asarray(rs.normal(size=shape), jnp.float32)
+
+
+@settings(deadline=None, max_examples=12)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 3),
+       st.sampled_from([1, 2, 4]), st.sampled_from([8, 16]))
+def test_output_is_convex_combination_of_values(seed, B, KV, S_mult):
+    """Softmax weights are a convex combination: every output coordinate lies
+    within [min_s v, max_s v] over visible positions."""
+    rs = np.random.RandomState(seed)
+    S, H, D = 4 * S_mult, KV * 2, 8
+    q = _rand(rs, B, S, H, D)
+    k = _rand(rs, B, S, KV, D)
+    v = _rand(rs, B, S, KV, D)
+    pos = jnp.arange(S)
+    o = np.asarray(attend(q, k, v, pos, pos, causal=True))
+    vv = np.asarray(v)
+    for t in range(S):
+        vis = vv[:, :t + 1]                       # visible values
+        lo = vis.min(axis=1, keepdims=False)      # [B, KV, D]
+        hi = vis.max(axis=1)
+        got = o[:, t].reshape(B, KV, H // KV, D)
+        assert (got >= lo[:, :, None] - 1e-4).all()
+        assert (got <= hi[:, :, None] + 1e-4).all()
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 6))
+def test_window_equals_truncated_context(seed, w):
+    """Windowed attention at position t == full attention restricted to the
+    last w tokens."""
+    rs = np.random.RandomState(seed)
+    B, S, KV, D = 1, 12, 2, 8
+    q = _rand(rs, B, S, KV, D)
+    k = _rand(rs, B, S, KV, D)
+    v = _rand(rs, B, S, KV, D)
+    pos = jnp.arange(S)
+    o_win = np.asarray(attend(q, k, v, pos, pos, causal=True, window=w))
+    t = S - 1
+    lo = max(0, t - w + 1)
+    o_trunc = np.asarray(attend(
+        q[:, t:t + 1], k[:, lo:t + 1], v[:, lo:t + 1],
+        jnp.arange(t, t + 1), jnp.arange(lo, t + 1), causal=True))
+    np.testing.assert_allclose(o_win[:, t], o_trunc[:, 0], atol=1e-5)
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_gqa_equals_repeated_kv_heads(seed):
+    """GQA (KV < H) must equal MHA with kv heads explicitly repeated."""
+    rs = np.random.RandomState(seed)
+    B, S, KV, G, D = 1, 10, 2, 3, 8
+    H = KV * G
+    q = _rand(rs, B, S, H, D)
+    k = _rand(rs, B, S, KV, D)
+    v = _rand(rs, B, S, KV, D)
+    pos = jnp.arange(S)
+    o_gqa = np.asarray(attend(q, k, v, pos, pos, causal=True))
+    k_rep = jnp.repeat(k, G, axis=2)
+    v_rep = jnp.repeat(v, G, axis=2)
+    o_mha = np.asarray(attend(q, k_rep, v_rep, pos, pos, causal=True))
+    np.testing.assert_allclose(o_gqa, o_mha, atol=1e-5)
+
+
+def test_permutation_equivariance_over_batch(rs):
+    B, S, KV, D = 3, 8, 2, 8
+    q = _rand(rs, B, S, KV * 2, D)
+    k = _rand(rs, B, S, KV, D)
+    v = _rand(rs, B, S, KV, D)
+    pos = jnp.arange(S)
+    perm = jnp.asarray([2, 0, 1])
+    o = attend(q, k, v, pos, pos, causal=True)
+    o_p = attend(q[perm], k[perm], v[perm], pos, pos, causal=True)
+    np.testing.assert_allclose(np.asarray(o)[np.asarray(perm)],
+                               np.asarray(o_p), atol=1e-6)

@@ -1,0 +1,106 @@
+"""Summary compression (paper future work) + int8 expert weights."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compression import (
+    compressed_bytes, dequantize_summary, jl_project, pca_project,
+    quantize_summary,
+)
+
+
+@settings(deadline=None, max_examples=15)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_int8_summary_roundtrip_error_bounded(seed):
+    rs = np.random.RandomState(seed)
+    x = jnp.asarray(rs.normal(0, 3, (8, 64)), jnp.float32)
+    back = dequantize_summary(quantize_summary(x))
+    rng = np.asarray(x.max(-1) - x.min(-1))
+    err = np.max(np.abs(np.asarray(back) - np.asarray(x)), axis=-1)
+    assert (err <= rng / 255.0 + 1e-5).all()       # one quantization step
+
+
+def test_jl_preserves_distances_approximately(rs):
+    x = jnp.asarray(rs.normal(size=(40, 512)), jnp.float32)
+    z = jl_project(x, 128, jax.random.PRNGKey(0))
+    dx = np.linalg.norm(np.asarray(x)[:, None] - np.asarray(x)[None], axis=-1)
+    dz = np.linalg.norm(np.asarray(z)[:, None] - np.asarray(z)[None], axis=-1)
+    iu = np.triu_indices(40, 1)
+    ratio = dz[iu] / np.maximum(dx[iu], 1e-9)
+    assert 0.6 < ratio.mean() < 1.4
+    assert ratio.std() < 0.25
+
+
+def test_pca_beats_jl_on_low_rank_data(rs):
+    """Data with true rank 4 + noise: PCA-16 should capture ~all variance."""
+    basis = rs.normal(size=(4, 256)).astype(np.float32)
+    coef = rs.normal(size=(64, 4)).astype(np.float32)
+    x = jnp.asarray(coef @ basis + 0.01 * rs.normal(size=(64, 256)),
+                    jnp.float32)
+    z, comps = pca_project(x, 8)
+    # reconstruct from components
+    xc = x - x.mean(0, keepdims=True)
+    recon = z @ comps.T
+    resid = float(jnp.linalg.norm(xc - recon) / jnp.linalg.norm(xc))
+    assert resid < 0.05
+
+
+def test_compressed_bytes_accounting():
+    assert compressed_bytes(1, 1000, "none") == 4000
+    assert compressed_bytes(1, 1000, "int8") == 1008
+    assert compressed_bytes(1, 1000, "jl", 100) == 400
+    assert compressed_bytes(1, 1000, "jl+int8", 100) == 108
+
+
+# ---------------------------------------------------------------------------
+# int8 expert weights
+
+
+def test_quantized_moe_matches_dequantized_reference(key, rs):
+    from repro.configs import get_config
+    from repro.models import param as pm
+    from repro.models.layers import NO_SHARD
+    from repro.models.moe import moe_specs, moe_apply
+
+    cfg = get_config("moonshot-v1-16b-a3b").reduced().replace(
+        compute_dtype="float32", num_shared_experts=0, quant_experts=True)
+    p = pm.init_tree(moe_specs(cfg, cfg.resolved_moe_d_ff), key)
+    # build the equivalent float MoE params by dequantizing
+    cfg_f = cfg.replace(quant_experts=False)
+    pf = {
+        "norm": p["norm"], "router": p["router"],
+        "w_gate": p["w_gate_q"].astype(jnp.float32) * p["w_gate_s"],
+        "w_up": p["w_up_q"].astype(jnp.float32) * p["w_up_s"],
+        "w_down": p["w_down_q"].astype(jnp.float32) * p["w_down_s"],
+    }
+    h = jnp.asarray(rs.normal(size=(2, 8, cfg.d_model)) * 0.5, jnp.float32)
+    yq, _ = moe_apply(p, h, NO_SHARD, cfg, cfg.resolved_moe_d_ff)
+    yf, _ = moe_apply(pf, h, NO_SHARD, cfg_f, cfg_f.resolved_moe_d_ff)
+    np.testing.assert_allclose(np.asarray(yq), np.asarray(yf), atol=2e-4,
+                               rtol=1e-3)
+
+
+def test_quantized_model_forward_finite(key):
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    cfg = get_config("llama4-scout-17b-a16e").reduced().replace(
+        quant_experts=True)
+    model = build_model(cfg)
+    params = model.init(key)
+    assert any(k.endswith("_q") for k in _leaf_keys(params))
+    toks = jax.random.randint(key, (2, 8), 0, cfg.vocab_size)
+    logits, _, _ = model.forward(params, {"tokens": toks})
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+
+
+def _leaf_keys(tree, prefix=""):
+    out = []
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.extend(_leaf_keys(v, f"{prefix}/{k}"))
+    else:
+        out.append(prefix)
+    return out

@@ -1,0 +1,69 @@
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config, list_archs
+
+
+def test_all_assigned_archs_registered():
+    archs = list_archs()
+    for a in ASSIGNED_ARCHS:
+        assert a in archs
+
+
+def test_assigned_configs_match_spec():
+    spec = {
+        "llama4-scout-17b-a16e": dict(num_layers=48, d_model=5120, num_heads=40,
+                                      num_kv_heads=8, d_ff=8192,
+                                      vocab_size=202048, num_experts=16,
+                                      num_experts_per_tok=1),
+        "moonshot-v1-16b-a3b": dict(num_layers=48, d_model=2048, num_heads=16,
+                                    num_kv_heads=16, d_ff=1408,
+                                    vocab_size=163840, num_experts=64,
+                                    num_experts_per_tok=6),
+        "llama-3.2-vision-90b": dict(num_layers=100, d_model=8192,
+                                     num_heads=64, num_kv_heads=8,
+                                     d_ff=28672, vocab_size=128256),
+        "hymba-1.5b": dict(num_layers=32, d_model=1600, num_heads=25,
+                           num_kv_heads=5, d_ff=5504, vocab_size=32001,
+                           ssm_state=16),
+        "phi4-mini-3.8b": dict(num_layers=32, d_model=3072, num_heads=24,
+                               num_kv_heads=8, d_ff=8192, vocab_size=200064),
+        "deepseek-v3-671b": dict(num_layers=61, d_model=7168, num_heads=128,
+                                 num_kv_heads=128, d_ff=2048,
+                                 vocab_size=129280, num_experts=256,
+                                 num_experts_per_tok=8),
+        "whisper-large-v3": dict(num_layers=32, d_model=1280, num_heads=20,
+                                 num_kv_heads=20, d_ff=5120, vocab_size=51866),
+        "deepseek-coder-33b": dict(num_layers=62, d_model=7168, num_heads=56,
+                                   num_kv_heads=8, d_ff=19200,
+                                   vocab_size=32256),
+        "gemma3-1b": dict(num_layers=26, d_model=1152, num_heads=4,
+                          num_kv_heads=1, d_ff=6912, vocab_size=262144),
+        "xlstm-350m": dict(num_layers=24, d_model=1024, num_heads=4,
+                           num_kv_heads=4, d_ff=0, vocab_size=50304),
+    }
+    for arch, fields in spec.items():
+        cfg = get_config(arch)
+        for k, v in fields.items():
+            assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+
+
+def test_reduced_constraints():
+    for a in ASSIGNED_ARCHS:
+        r = get_config(a).reduced()
+        assert r.num_layers <= 2
+        assert r.d_model <= 512
+        assert r.num_experts <= 4
+        assert r.vocab_size <= 512
+
+
+def test_input_shapes():
+    assert INPUT_SHAPES["train_4k"].seq_len == 4096
+    assert INPUT_SHAPES["train_4k"].global_batch == 256
+    assert INPUT_SHAPES["prefill_32k"].global_batch == 32
+    assert INPUT_SHAPES["decode_32k"].global_batch == 128
+    assert INPUT_SHAPES["long_500k"].seq_len == 524288
+    assert INPUT_SHAPES["long_500k"].kind == "decode"
+
+
+def test_sub_quadratic_flags():
+    eligible = {a for a in ASSIGNED_ARCHS if get_config(a).sub_quadratic}
+    assert eligible == {"llama4-scout-17b-a16e", "hymba-1.5b", "gemma3-1b",
+                        "xlstm-350m"}

@@ -1,0 +1,178 @@
+"""Core layer: summaries, coreset, kmeans, dbscan — including hypothesis
+property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    class_quotas, coreset_indices, dbscan, encoder_summary, kmeans,
+    label_distribution, pairwise_sq_dist, per_label_mean, pxy_histogram,
+)
+
+
+# ---------------------------------------------------------------------------
+# summaries
+
+
+def test_label_distribution_normalized(rs):
+    labels = jnp.asarray(rs.randint(0, 5, 100), jnp.int32)
+    valid = jnp.asarray(rs.rand(100) > 0.3)
+    p = label_distribution(labels, valid, 5)
+    assert abs(float(p.sum()) - 1.0) < 1e-6
+    assert float(p.min()) >= 0.0
+
+
+def test_label_distribution_empty_client():
+    p = label_distribution(jnp.zeros(4, jnp.int32), jnp.zeros(4, bool), 8)
+    np.testing.assert_allclose(np.asarray(p), 1.0 / 8)
+
+
+def test_pxy_histogram_normalized_per_class(rs):
+    n, d, c, b = 60, 12, 4, 8
+    feats = jnp.asarray(rs.rand(n, d), jnp.float32)
+    labels = jnp.asarray(rs.randint(0, c, n), jnp.int32)
+    valid = jnp.ones(n, bool)
+    h = pxy_histogram(feats, labels, valid, c, bins=b).reshape(c, d, b)
+    sums = np.asarray(h.sum(-1))
+    present = np.unique(np.asarray(labels))
+    np.testing.assert_allclose(sums[present], 1.0, atol=1e-5)
+
+
+def test_encoder_summary_size_and_content(rs, key):
+    n, c, k, hdim = 80, 6, 32, 16
+    feats = jnp.asarray(rs.rand(n, 5, 5, 1), jnp.float32)
+    labels = jnp.asarray(rs.randint(0, c, n), jnp.int32)
+    valid = jnp.ones(n, bool)
+    enc = lambda x: x.reshape(x.shape[0], -1)[:, :hdim]  # noqa: E731
+    s = encoder_summary(feats, labels, valid, enc, c, k, key)
+    assert s.shape == (c * hdim + c,)          # the paper's C*H + C
+    p_y = np.asarray(s[-c:])
+    assert abs(p_y.sum() - 1.0) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# coreset (property tests)
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(10, 200), st.integers(2, 10), st.integers(4, 64),
+       st.integers(0, 2 ** 31 - 1))
+def test_coreset_quota_properties(n, c, k, seed):
+    rs = np.random.RandomState(seed)
+    labels = jnp.asarray(rs.randint(0, c, n), jnp.int32)
+    valid = jnp.asarray(rs.rand(n) > 0.2)
+    quotas = np.asarray(class_quotas(labels, valid, c, k))
+    counts = np.bincount(np.asarray(labels)[np.asarray(valid)], minlength=c)
+    nv = int(valid.sum())
+    assert (quotas <= counts).all()               # never more than available
+    assert quotas.sum() == min(k, quotas.sum())   # well-formed
+    if nv >= k:
+        assert quotas.sum() == k                  # exactly k when possible
+
+
+@settings(deadline=None, max_examples=15)
+@given(st.integers(30, 150), st.integers(2, 8), st.integers(0, 2 ** 31 - 1))
+def test_coreset_preserves_proportions(n, c, seed):
+    rs = np.random.RandomState(seed)
+    k = 24
+    labels = jnp.asarray(rs.randint(0, c, n), jnp.int32)
+    valid = jnp.ones(n, bool)
+    idx, keep = coreset_indices(labels, valid, c, k, jax.random.PRNGKey(seed))
+    sel = np.asarray(labels[idx])[np.asarray(keep)]
+    full = np.bincount(np.asarray(labels), minlength=c) / n
+    got = np.bincount(sel, minlength=c) / max(len(sel), 1)
+    # largest-remainder: per-class deviation < 1/k + tolerance
+    assert np.max(np.abs(got - full)) <= 1.0 / k + 1.0 / n + 1e-6
+    # no duplicate indices among kept
+    kept_idx = np.asarray(idx)[np.asarray(keep)]
+    assert len(set(kept_idx.tolist())) == len(kept_idx)
+
+
+# ---------------------------------------------------------------------------
+# kmeans
+
+
+def _blobs(rs, n_per=40, k=3, d=6, sep=8.0):
+    return np.concatenate([
+        rs.normal(i * sep, 0.5, (n_per, d)) for i in range(k)]).astype(np.float32)
+
+
+def test_kmeans_recovers_blobs(rs, key):
+    x = jnp.asarray(_blobs(rs))
+    res = kmeans(x, 3, key)
+    a = np.asarray(res.assignment)
+    for i in range(3):
+        assert len(set(a[i * 40:(i + 1) * 40].tolist())) == 1
+    assert len(set(a.tolist())) == 3
+
+
+def test_kmeans_assignment_is_nearest_centroid(rs, key):
+    x = jnp.asarray(rs.normal(size=(100, 5)), jnp.float32)
+    res = kmeans(x, 4, key, max_iters=20)
+    d = np.asarray(pairwise_sq_dist(x, res.centroids))
+    np.testing.assert_array_equal(np.asarray(res.assignment), d.argmin(1))
+    assert abs(float(res.inertia) - d.min(1).sum()) < 1e-2
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(2, 6), st.integers(0, 2 ** 31 - 1))
+def test_kmeans_inertia_not_worse_than_random_centroids(k, seed):
+    rs = np.random.RandomState(seed)
+    x = jnp.asarray(rs.normal(size=(60, 4)), jnp.float32)
+    res = kmeans(x, k, jax.random.PRNGKey(seed), max_iters=30)
+    rand_c = x[jnp.asarray(rs.choice(60, k, replace=False))]
+    rand_inertia = float(pairwise_sq_dist(x, rand_c).min(1).sum())
+    assert float(res.inertia) <= rand_inertia + 1e-3
+
+
+# ---------------------------------------------------------------------------
+# dbscan
+
+
+def _brute_dbscan(x, eps, min_samples):
+    """Reference implementation (classic BFS)."""
+    n = len(x)
+    d = ((x[:, None] - x[None]) ** 2).sum(-1) ** 0.5
+    adj = d <= eps
+    core = adj.sum(1) >= min_samples
+    labels = -np.ones(n, int)
+    cid = 0
+    for i in range(n):
+        if labels[i] != -1 or not core[i]:
+            continue
+        stack = [i]
+        labels[i] = cid
+        while stack:
+            p = stack.pop()
+            for q in np.flatnonzero(adj[p]):
+                if labels[q] == -1:
+                    labels[q] = cid
+                    if core[q]:
+                        stack.append(q)
+        cid += 1
+    return labels
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_dbscan_matches_bruteforce_partition(seed):
+    rs = np.random.RandomState(seed)
+    x = np.concatenate([rs.normal(0, 0.3, (20, 3)),
+                        rs.normal(5, 0.3, (25, 3)),
+                        rs.uniform(-10, 10, (5, 3))]).astype(np.float32)
+    eps, ms = 1.0, 4
+    want = _brute_dbscan(x, eps, ms)
+    got = np.asarray(dbscan(jnp.asarray(x), eps, ms).labels)
+    # same partition up to label permutation; same noise set
+    assert ((want == -1) == (got == -1)).all()
+    for lab in set(want[want >= 0].tolist()):
+        members = np.flatnonzero(want == lab)
+        assert len(set(got[members].tolist())) == 1
+
+
+def test_dbscan_blob_separation(rs):
+    pts = _blobs(rs, n_per=30, k=3, d=4, sep=10.0)
+    res = dbscan(jnp.asarray(pts), eps=2.5, min_samples=4)
+    assert int(res.num_clusters) == 3

@@ -1,0 +1,37 @@
+"""Integration: prefill→decode continuation must match the full forward pass
+(fp32, high MoE capacity so no tokens drop)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.models import build_model
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_decode_matches_forward(arch, key):
+    cfg = get_config(arch).reduced().replace(compute_dtype="float32",
+                                             capacity_factor=16.0)
+    model = build_model(cfg)
+    params = model.init(key)
+    B, S = 2, 12
+    toks = jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size)
+    full = {"tokens": toks}
+    pre = {"tokens": toks[:, :S]}
+    for b in (full, pre):
+        if cfg.frontend == "audio_frames":
+            b["frames"] = 0.1 * jax.random.normal(
+                key, (B, cfg.num_frontend_tokens, cfg.d_model))
+        elif cfg.frontend == "vision_patches":
+            b["patches"] = 0.1 * jax.random.normal(
+                key, (B, cfg.num_frontend_tokens, cfg.d_model))
+    full_logits, _, _ = model.forward(params, full)
+    _, _, caches = model.forward(params, pre, want_cache=True, cache_len=S + 4)
+    dec_logits, _ = model.decode_step(params, caches, toks[:, S:S + 1],
+                                      jnp.int32(S))
+    ref = np.asarray(full_logits[:, -1])
+    got = np.asarray(dec_logits[:, 0])
+    err = np.max(np.abs(ref - got)) / max(np.max(np.abs(ref)), 1e-6)
+    assert err < 5e-3, f"{arch}: rel_err={err:.3e}"

@@ -1,0 +1,77 @@
+"""HLO analyzer + roofline math unit tests (synthetic HLO text — no devices)."""
+import numpy as np
+
+from repro.utils.hlo import analyze_hlo, while_trip_counts
+from repro.utils.roofline import (
+    HBM_BW, ICI_BW, PEAK_FLOPS, Roofline, dense_model_flops, moe_model_flops,
+)
+
+_HLO = """
+HloModule jit_step
+
+%body.1 (arg: (s32[], f32[8,128])) -> (s32[], f32[8,128]) {
+  %p = (s32[], f32[8,128]) parameter(0)
+  %x = f32[8,128]{1,0} get-tuple-element(%p), index=1
+  %w = f32[128,128]{1,0} constant({...})
+  %dot.1 = f32[8,128]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,128]{1,0} all-reduce(%dot.1), replica_groups={}, to_apply=%sum.1
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %t = (s32[], f32[8,128]) tuple(%i, %ar)
+}
+
+%sum.1 (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %add.9 = f32[] add(%a, %b)
+}
+
+%cond.1 (arg: (s32[], f32[8,128])) -> pred[] {
+  %p2 = (s32[], f32[8,128]) parameter(0)
+  %i2 = s32[] get-tuple-element(%p2), index=0
+  %c = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i2, %c), direction=LT
+}
+
+ENTRY %main.1 (x: f32[8,128]) -> f32[8,128] {
+  %x0 = f32[8,128]{1,0} parameter(0)
+  %ag = f32[8,128]{1,0} all-gather(%x0), replica_groups={}, dimensions={0}
+  %init = s32[] constant(0)
+  %tup = (s32[], f32[8,128]) tuple(%init, %ag)
+  %wh = (s32[], f32[8,128]) while(%tup), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"10"}}
+  ROOT %out = f32[8,128]{1,0} get-tuple-element(%wh), index=1
+}
+"""
+
+
+def test_trip_counts():
+    assert while_trip_counts(_HLO) == [10]
+
+
+def test_analyze_hlo_multiplies_loop_body():
+    a = analyze_hlo(_HLO)
+    # dot: 2 * 8*128 * 128 flops, executed 10 times
+    assert a["flops"] >= 2 * 8 * 128 * 128 * 10
+    # all-reduce inside the loop: 10 * 8*128*4 bytes; all-gather once
+    ar = a["collectives"]["all-reduce"]
+    ag = a["collectives"]["all-gather"]
+    assert ar == 10 * 8 * 128 * 4
+    assert ag == 8 * 128 * 4
+    assert a["collective_counts"]["all-reduce"] == 10
+    assert a["entry"] and "main" in a["entry"]
+
+
+def test_roofline_terms_and_dominance():
+    r = Roofline(arch="x", shape="train_4k", mesh="pod16x16", chips=256,
+                 hlo_flops=PEAK_FLOPS, hlo_bytes=HBM_BW / 2,
+                 collective_bytes=ICI_BW / 4,
+                 model_flops=PEAK_FLOPS * 256 * 0.5)
+    assert abs(r.t_compute - 1.0) < 1e-9
+    assert abs(r.t_memory - 0.5) < 1e-9
+    assert abs(r.t_collective - 0.25) < 1e-9
+    assert r.dominant == "compute"
+    assert abs(r.useful_flops_ratio - 0.5) < 1e-9
+
+
+def test_model_flops_helpers():
+    assert dense_model_flops(10, 100) == 6000
+    assert moe_model_flops(3, 100) == 1800

@@ -1,0 +1,70 @@
+"""Optimizers + checkpointing."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_checkpoint, restore_like, save_checkpoint
+from repro.optim import adamw, apply_updates, cosine_warmup, sgd
+from repro.optim.optimizers import AdamWState
+
+
+def _quad_loss(params):
+    return jnp.sum(jnp.square(params["w"] - 3.0)) + jnp.sum(
+        jnp.square(params["b"] + 1.0))
+
+
+def _minimize(opt, steps=200):
+    init, update = opt
+    params = {"w": jnp.zeros((4,)), "b": jnp.zeros((2,))}
+    state = init(params)
+    for i in range(steps):
+        grads = jax.grad(_quad_loss)(params)
+        updates, state = update(grads, state, params, i)
+        params = apply_updates(params, updates)
+    return params
+
+
+def test_sgd_converges():
+    params = _minimize(sgd(0.1, momentum=0.9))
+    np.testing.assert_allclose(np.asarray(params["w"]), 3.0, atol=1e-3)
+
+
+def test_adamw_converges():
+    params = _minimize(adamw(0.1), steps=400)
+    np.testing.assert_allclose(np.asarray(params["w"]), 3.0, atol=1e-2)
+    np.testing.assert_allclose(np.asarray(params["b"]), -1.0, atol=1e-2)
+
+
+def test_adamw_weight_decay_shrinks():
+    init, update = adamw(0.05, weight_decay=0.5)
+    params = {"w": jnp.full((3,), 10.0)}
+    state = init(params)
+    for i in range(50):
+        grads = {"w": jnp.zeros((3,))}
+        updates, state = update(grads, state, params, i)
+        params = apply_updates(params, updates)
+    assert float(jnp.abs(params["w"]).max()) < 10.0
+
+
+def test_cosine_warmup_schedule():
+    s = cosine_warmup(1.0, warmup_steps=10, total_steps=110)
+    assert float(s(0)) == 0.0
+    assert abs(float(s(10)) - 1.0) < 1e-6
+    assert float(s(110)) < 1e-6
+    assert float(s(5)) == 0.5
+
+
+def test_checkpoint_roundtrip(tmp_path, key):
+    params = {"a": {"w": jax.random.normal(key, (3, 4))},
+              "b": jnp.arange(5, dtype=jnp.int32)}
+    path = os.path.join(tmp_path, "ckpt")
+    save_checkpoint(path, params, step=7, extra={"arch": "test"})
+    loaded, meta = load_checkpoint(path)
+    assert meta["step"] == 7
+    restored = restore_like(params, loaded)
+    np.testing.assert_allclose(np.asarray(restored["a"]["w"]),
+                               np.asarray(params["a"]["w"]))
+    np.testing.assert_array_equal(np.asarray(restored["b"]),
+                                  np.asarray(params["b"]))

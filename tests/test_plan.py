@@ -1,0 +1,72 @@
+"""Layer-plan compiler: folding correctness for every assigned stack."""
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.models.plan import build_plan, compile_plan, encoder_plan
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_stages_cover_plan_exactly(arch):
+    cfg = get_config(arch)
+    plan = build_plan(cfg)
+    assert len(plan) == cfg.num_layers
+    stages = compile_plan(plan)
+    rebuilt = []
+    for st in stages:
+        rebuilt.extend(list(st.pattern) * st.repeats)
+    assert rebuilt == plan             # lossless folding
+
+
+def test_gemma3_window_pattern():
+    plan = build_plan(get_config("gemma3-1b"))
+    for i, p in enumerate(plan):
+        if (i % 6) == 5:
+            assert p.window == 0       # global layer
+        else:
+            assert p.window == 512
+
+
+def test_llama4_moe_and_chunked_pattern():
+    cfg = get_config("llama4-scout-17b-a16e")
+    plan = build_plan(cfg)
+    assert all(p.ffn == "moe" for p in plan)    # Scout: MoE every layer
+    glob = [i for i, p in enumerate(plan) if p.window == 0]
+    assert glob == list(range(3, 48, 4))        # 3 local : 1 global
+
+
+def test_deepseek_first_k_dense():
+    plan = build_plan(get_config("deepseek-v3-671b"))
+    assert [p.ffn for p in plan[:3]] == ["dense"] * 3
+    assert all(p.ffn == "moe" for p in plan[3:])
+    assert all(p.attn == "mla" for p in plan)
+    assert plan[0].d_ff == 18432 and plan[3].d_ff == 2048
+
+
+def test_vision_cross_attention_period():
+    plan = build_plan(get_config("llama-3.2-vision-90b"))
+    cross = [i for i, p in enumerate(plan) if p.cross == "only"]
+    assert cross == list(range(4, 100, 5))
+    assert len(cross) == 20
+
+
+def test_whisper_decoder_cross_everywhere():
+    cfg = get_config("whisper-large-v3")
+    plan = build_plan(cfg)
+    assert all(p.cross == "both" for p in plan)
+    enc = encoder_plan(cfg)
+    assert len(enc) == 32
+    assert all(not p.causal for p in enc)
+
+
+def test_xlstm_slstm_positions():
+    plan = build_plan(get_config("xlstm-350m"))
+    kinds = [p.kind for p in plan]
+    assert kinds.count("slstm") == 3
+    assert all(kinds[i] == "slstm" for i in (7, 15, 23))
+
+
+def test_hymba_global_layers():
+    plan = build_plan(get_config("hymba-1.5b"))
+    assert all(p.kind == "hymba" for p in plan)
+    glob = [i for i, p in enumerate(plan) if p.window == 0]
+    assert glob == [0, 15, 31]

@@ -1,0 +1,90 @@
+"""Logical-axis sharding rules: shape-aware resolution properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.utils.sharding import DEFAULT_RULES, make_spec
+
+
+@pytest.fixture(scope="module")
+def mesh1():
+    return Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+
+
+def _fake_mesh(shape, axes):
+    """Mesh construction requires real devices; for spec-resolution tests we
+    only need axis names and sizes, so fake the device array with the single
+    CPU device replicated is not allowed — instead test against a 1x1 mesh
+    plus a pure-logic harness below."""
+
+
+class FakeMesh:
+    """Duck-typed mesh (axis_names + devices.shape) for make_spec logic."""
+    def __init__(self, shape, axes):
+        self.axis_names = axes
+        self.devices = np.empty(shape)
+
+
+def test_divisibility_drops_axis():
+    mesh = FakeMesh((16, 16), ("data", "model"))
+    # kv_heads=1 cannot shard over model=16 -> replicated
+    spec = make_spec(("batch", "cache_seq", "kv_heads", "head_dim"),
+                     (128, 32768, 1, 256), mesh)
+    assert spec[2] is None or len(spec) <= 2 or spec[2] is None
+    # batch=128 shards over data
+    assert spec[0] == "data"
+    # cache_seq falls back: data already used -> replicated
+    assert len(spec) < 2 or spec[1] is None
+
+
+def test_batch_one_gives_seq_the_data_axis():
+    mesh = FakeMesh((16, 16), ("data", "model"))
+    spec = make_spec(("batch", "cache_seq", "kv_heads", "head_dim"),
+                     (1, 524288, 1, 256), mesh)
+    assert spec[0] is None
+    assert spec[1] == "data"          # long-context cache shards over seq
+
+
+def test_multi_pod_batch_uses_both_axes():
+    mesh = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+    spec = make_spec(("batch", None, None), (256, 4096, 1024), mesh)
+    assert spec[0] == ("pod", "data")
+
+
+def test_no_mesh_axis_reused():
+    mesh = FakeMesh((4, 4), ("data", "model"))
+    spec = make_spec(("embed", "mlp"), (64, 64), mesh)
+    flat = []
+    for s in spec:
+        if isinstance(s, tuple):
+            flat.extend(s)
+        elif s is not None:
+            flat.append(s)
+    assert len(flat) == len(set(flat))
+
+
+@settings(deadline=None, max_examples=50)
+@given(
+    st.lists(st.sampled_from(list(DEFAULT_RULES) + [None]), min_size=1,
+             max_size=4),
+    st.lists(st.sampled_from([1, 2, 3, 16, 17, 256, 4096]), min_size=1,
+             max_size=4),
+)
+def test_make_spec_properties(axes, dims):
+    n = min(len(axes), len(dims))
+    axes, dims = axes[:n], dims[:n]
+    mesh = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+    spec = make_spec(axes, dims, mesh)
+    sizes = dict(pod=2, data=16, model=16)
+    used = []
+    for s, d in zip(tuple(spec) + (None,) * (n - len(spec)), dims):
+        names = s if isinstance(s, tuple) else ([s] if s else [])
+        total = 1
+        for name in names:
+            used.append(name)
+            total *= sizes[name]
+        assert d % total == 0          # always divisible
+    assert len(used) == len(set(used))  # never reuse a mesh axis

@@ -1,0 +1,132 @@
+"""SSM layers: chunked scans equal naive recurrences; decode == forward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import param as pm
+from repro.models.layers import NO_SHARD
+from repro.models.ssm import (
+    _chunked_linear_scan, mamba_decode, mamba_forward, mamba_specs,
+    mlstm_decode, mlstm_forward, mlstm_specs,
+    slstm_decode, slstm_forward, slstm_specs,
+)
+
+
+def test_chunked_linear_scan_matches_naive(rs):
+    B, S, C = 2, 64, 5
+    a = jnp.asarray(rs.uniform(0.5, 1.0, (B, S, C)), jnp.float32)
+    b = jnp.asarray(rs.normal(size=(B, S, C)), jnp.float32)
+    h0 = jnp.asarray(rs.normal(size=(B, C)), jnp.float32)
+    hs, hl = _chunked_linear_scan(a, b, h0, chunk=16)
+    # naive
+    h = np.asarray(h0)
+    out = []
+    for t in range(S):
+        h = np.asarray(a[:, t]) * h + np.asarray(b[:, t])
+        out.append(h.copy())
+    want = np.stack(out, 1)
+    np.testing.assert_allclose(np.asarray(hs), want, atol=1e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(hl), want[:, -1], atol=1e-5,
+                               rtol=1e-4)
+
+
+@pytest.mark.parametrize("chunk", [4, 16, 64])
+def test_chunked_scan_chunk_invariance(rs, chunk):
+    B, S, C = 1, 64, 3
+    a = jnp.asarray(rs.uniform(0.2, 1.0, (B, S, C)), jnp.float32)
+    b = jnp.asarray(rs.normal(size=(B, S, C)), jnp.float32)
+    h0 = jnp.zeros((B, C))
+    ref, _ = _chunked_linear_scan(a, b, h0, chunk=S)
+    got, _ = _chunked_linear_scan(a, b, h0, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-5)
+
+
+def _cfg(name, **kw):
+    return get_config(name).reduced().replace(compute_dtype="float32", **kw)
+
+
+def test_mamba_decode_matches_forward(rs, key):
+    cfg = _cfg("hymba-1.5b")
+    p = pm.init_tree(mamba_specs(cfg), key)
+    B, S = 2, 24
+    x = jnp.asarray(rs.normal(size=(B, S, cfg.d_model)) * 0.3, jnp.float32)
+    y_ref, _ = mamba_forward(p, x, NO_SHARD, cfg, chunk=8)
+    d_in = cfg.ssm_expand * cfg.d_model
+    cache = {"conv": jnp.zeros((B, cfg.ssm_conv - 1, d_in)),
+             "h": jnp.zeros((B, d_in, cfg.ssm_state))}
+    outs = []
+    for t in range(S):
+        o, cache = mamba_decode(p, x[:, t:t + 1], cache, NO_SHARD, cfg)
+        outs.append(o)
+    inc = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(inc), np.asarray(y_ref),
+                               atol=2e-4, rtol=1e-3)
+
+
+def test_mamba_final_state_consistent(rs, key):
+    cfg = _cfg("hymba-1.5b")
+    p = pm.init_tree(mamba_specs(cfg), key)
+    B, S = 1, 16
+    x = jnp.asarray(rs.normal(size=(B, S, cfg.d_model)) * 0.3, jnp.float32)
+    _, st = mamba_forward(p, x, NO_SHARD, cfg, chunk=4, want_state=True)
+    d_in = cfg.ssm_expand * cfg.d_model
+    cache = {"conv": jnp.zeros((B, cfg.ssm_conv - 1, d_in)),
+             "h": jnp.zeros((B, d_in, cfg.ssm_state))}
+    for t in range(S):
+        _, cache = mamba_decode(p, x[:, t:t + 1], cache, NO_SHARD, cfg)
+    np.testing.assert_allclose(np.asarray(st["h"]), np.asarray(cache["h"]),
+                               atol=2e-4, rtol=1e-3)
+
+
+def test_mlstm_decode_matches_forward(rs, key):
+    cfg = _cfg("xlstm-350m")
+    p = pm.init_tree(mlstm_specs(cfg), key)
+    B, S = 2, 24
+    x = jnp.asarray(rs.normal(size=(B, S, cfg.d_model)) * 0.3, jnp.float32)
+    y_ref, st_ref = mlstm_forward(p, x, NO_SHARD, cfg, chunk=8,
+                                  want_state=True)
+    NH = cfg.num_heads
+    dk = cfg.ssm_expand * cfg.d_model // NH
+    cache = {"C": jnp.zeros((B, NH, dk, dk)), "n": jnp.zeros((B, NH, dk)),
+             "m": jnp.full((B, NH), -1e30)}
+    outs = []
+    for t in range(S):
+        o, cache = mlstm_decode(p, x[:, t:t + 1], cache, NO_SHARD, cfg)
+        outs.append(o)
+    inc = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(inc), np.asarray(y_ref),
+                               atol=3e-4, rtol=3e-3)
+    np.testing.assert_allclose(np.asarray(cache["C"]),
+                               np.asarray(st_ref["C"]), atol=3e-4, rtol=3e-3)
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 24])
+def test_mlstm_chunk_invariance(rs, key, chunk):
+    cfg = _cfg("xlstm-350m")
+    p = pm.init_tree(mlstm_specs(cfg), key)
+    B, S = 1, 24
+    x = jnp.asarray(rs.normal(size=(B, S, cfg.d_model)) * 0.3, jnp.float32)
+    ref, _ = mlstm_forward(p, x, NO_SHARD, cfg, chunk=S)
+    got, _ = mlstm_forward(p, x, NO_SHARD, cfg, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-4,
+                               rtol=1e-3)
+
+
+def test_slstm_decode_matches_forward(rs, key):
+    cfg = _cfg("xlstm-350m")
+    p = pm.init_tree(slstm_specs(cfg), key)
+    B, S = 2, 12
+    x = jnp.asarray(rs.normal(size=(B, S, cfg.d_model)) * 0.3, jnp.float32)
+    y_ref, _ = slstm_forward(p, x, NO_SHARD, cfg)
+    d = cfg.d_model
+    cache = {"c": jnp.zeros((B, d)), "n": jnp.zeros((B, d)),
+             "h": jnp.zeros((B, d)), "m": jnp.full((B, d), -1e30)}
+    outs = []
+    for t in range(S):
+        o, cache = slstm_decode(p, x[:, t:t + 1], cache, NO_SHARD, cfg)
+        outs.append(o)
+    inc = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(inc), np.asarray(y_ref),
+                               atol=1e-4, rtol=1e-3)
