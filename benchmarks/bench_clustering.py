@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dbscan, kmeans
+from repro.core import dbscan, kmeans, minibatch_kmeans
 
 
 def _synth_summaries(rs, n, dim, groups=8, sep=4.0):
@@ -67,7 +67,40 @@ def run(scales=((500, "femnist"), (2000, "openimage")),
                 rows.append({"name": f"clustering/kmeans-encoder/{dname}",
                              "pipeline": "kmeans-encoder", "dataset": dname,
                              "n": n, "dim": dim_capped, "seconds": dt_km,
-                             "clusters": k_clusters})
+                             "clusters": k_clusters,
+                             "inertia": float(resk.inertia)})
+                # mini-batch path: per-step cost independent of N — the
+                # fleet-scale engine's clustering side (DESIGN.md §4)
+                dt_mb, resm = _time(minibatch_kmeans, x, k_clusters,
+                                    jax.random.PRNGKey(seed))
+                rows.append({"name": f"clustering/minibatch-encoder/{dname}",
+                             "pipeline": "minibatch-encoder",
+                             "dataset": dname, "n": n, "dim": dim_capped,
+                             "seconds": dt_mb, "clusters": k_clusters,
+                             "inertia": float(resm.inertia)})
+    return rows
+
+
+def run_fleet(n: int, dim: int, k_clusters: int = 10, seed: int = 0) -> list:
+    """Fleet-scale client counts: full Lloyd vs mini-batch K-means over
+    encoder-sized summaries.  Mini-batch per-step cost is independent of N
+    (batch_size·K·D), which is what makes clustering affordable past the
+    scales where every-client Lloyd iterations dominate the round."""
+    rs = np.random.RandomState(seed)
+    x_np, _ = _synth_summaries(rs, n, dim, groups=16)
+    x = jnp.asarray(x_np)
+    rows = []
+    dt_km, res = _time(kmeans, x, k_clusters, jax.random.PRNGKey(seed))
+    rows.append({"name": f"clustering/fleet-kmeans/n{n}",
+                 "pipeline": "fleet-kmeans", "dataset": f"n{n}", "n": n,
+                 "dim": dim, "seconds": dt_km, "clusters": k_clusters,
+                 "inertia": float(res.inertia)})
+    dt_mb, res = _time(minibatch_kmeans, x, k_clusters,
+                       jax.random.PRNGKey(seed), batch_size=512, iters=30)
+    rows.append({"name": f"clustering/fleet-minibatch/n{n}",
+                 "pipeline": "fleet-minibatch", "dataset": f"n{n}", "n": n,
+                 "dim": dim, "seconds": dt_mb, "clusters": k_clusters,
+                 "inertia": float(res.inertia)})
     return rows
 
 
@@ -86,6 +119,24 @@ def main(fast: bool = True):
         if a and b:
             print(f"clustering/speedup_dbscanpxy_over_kmeans/{d},0,"
                   f"{a['seconds'] / max(b['seconds'], 1e-9):.1f}x")
+        mb = by.get(("minibatch-encoder", d))
+        if b and mb:
+            q = mb["inertia"] / max(b["inertia"], 1e-9)
+            print(f"clustering/minibatch_speedup_over_kmeans/{d},0,"
+                  f"{b['seconds'] / max(mb['seconds'], 1e-9):.1f}x "
+                  f"(inertia ratio {q:.2f}; <1x expected at small N — "
+                  f"mini-batch pays off at fleet scale, see fleet rows)")
+    # fleet scale: the batched engine's clustering side (DESIGN.md §4)
+    fleet = run_fleet(n=6000 if fast else 20000, dim=4030)
+    rows += fleet
+    for r in fleet:
+        print(f"{r['name']},{r['seconds'] * 1e6:.0f},"
+              f"n={r['n']};dim={r['dim']};inertia={r['inertia']:.3g}")
+    print(f"clustering/fleet_speedup_minibatch,0,"
+          f"{fleet[0]['seconds'] / max(fleet[1]['seconds'], 1e-9):.1f}x "
+          f"(inertia ratio "
+          f"{fleet[1]['inertia'] / max(fleet[0]['inertia'], 1e-9):.2f})")
+
     # paper-scale extrapolation: DBSCAN is O(N²·D); K-means O(N·K·D·iters).
     # Scale the measured times to the paper's client counts and the real
     # (uncapped) P(X|y) summary dim, where the paper observed ">2 days".

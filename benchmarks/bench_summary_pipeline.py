@@ -4,21 +4,28 @@ for real on this host):
   iteration 1: eager per-client summary (baseline; retraces every client)
                -> jitted + power-of-two size bucketing (compile once per
                bucket, reuse across the federation and across refresh rounds)
+  iteration 2: fleet-scale batched engine (DESIGN.md §4) — stale clients
+               stacked into padded [M, N_bucket, ...] buckets, ONE jitted
+               vmap dispatch per bucket chunk instead of one per client.
 
-CSV: pipeline/<method>/<variant>,us_per_call,speedup
+CSV: pipeline/<...>,us_per_call,derived
 """
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
 import jax
 
-from repro.data.synthetic import DatasetSpec, FederatedDataset
+from repro.core import BatchedSummaryEngine
+from repro.data.synthetic import DatasetSpec, FederatedDataset, small_spec
 from repro.fl.client import timed_summary
 from repro.models.cnn import CNNConfig, build_cnn, cnn_apply
 
 
 def run(num_clients: int = 12, seed: int = 0) -> list:
+    """Iteration 1: eager vs jit+bucket, per client (paper Table 2 regime)."""
     spec = DatasetSpec("femnist-like", 2800, 62, (28, 28, 1),
                        avg_samples=109, max_samples=512)
     data = FederatedDataset(spec, seed=seed)
@@ -45,6 +52,50 @@ def run(num_clients: int = 12, seed: int = 0) -> list:
     return rows
 
 
+def run_fleet(num_clients: int = 512, methods=("py", "encoder", "pxy"),
+              seed: int = 0) -> list:
+    """Iteration 2: refresh a whole fleet of stale clients, per-client jit
+    loop vs the batched engine — dispatch counts and wall time, with the
+    numerical-equivalence check the new test also asserts."""
+    spec = small_spec(num_clients=num_clients, num_classes=10, side=12,
+                      avg_samples=48)
+    data = FederatedDataset(spec, seed=seed)
+    enc_params = build_cnn(CNNConfig(in_channels=1, feature_dim=32),
+                           jax.random.PRNGKey(7))
+    enc_fn = jax.jit(lambda x: cnn_apply(enc_params, x))
+    clients = [(c, *data.client_data(c), jax.random.PRNGKey(seed * 7 + c))
+               for c in range(num_clients)]
+
+    rows = []
+    for method in methods:
+        # per-client path: one jitted dispatch per client (timed_summary
+        # already excludes compiles via its warm call)
+        per_client_s, per_summaries = 0.0, {}
+        for c, feats, labels, valid, key in clients:
+            s, _, dt = timed_summary(method, feats, labels, valid,
+                                     spec.num_classes, encoder_fn=enc_fn,
+                                     coreset_k=32, bins=8, key=key)
+            per_client_s += dt
+            per_summaries[c] = s
+        # batched engine: one dispatch per (bucket, chunk)
+        engine = BatchedSummaryEngine(
+            method, spec.num_classes, encoder_fn=enc_fn, coreset_k=32,
+            bins=8, max_batch=64 if method == "pxy" else 256)
+        t0 = time.perf_counter()
+        results = engine.summarize(clients)
+        end_to_end = time.perf_counter() - t0
+        equal = all(np.allclose(per_summaries[c], results[c].summary,
+                                atol=1e-5) for c in range(num_clients))
+        st = engine.stats
+        rows.append({
+            "method": method, "clients": num_clients,
+            "perclient_s": per_client_s, "perclient_dispatches": num_clients,
+            "batched_s": st.wall_s, "batched_dispatches": st.dispatches,
+            "end_to_end_s": end_to_end, "equal": equal,
+        })
+    return rows
+
+
 def main(fast: bool = True):
     rows = run(num_clients=6 if fast else 16)
     by = {}
@@ -55,7 +106,27 @@ def main(fast: bool = True):
         if (m, "eager") in by and (m, "jit+bucket") in by:
             sp = by[(m, "eager")] / max(by[(m, "jit+bucket")], 1e-9)
             print(f"pipeline/{m}/speedup,0,{sp:.1f}x")
-    return rows
+
+    # fleet scale: the acceptance bar is >=512 clients refreshed with >=5x
+    # fewer jitted dispatches than the per-client path, equal summaries
+    fleet = run_fleet(num_clients=512,
+                      methods=("py", "encoder") if fast
+                      else ("py", "encoder", "pxy"))
+    for r in fleet:
+        m = r["method"]
+        print(f"pipeline/fleet/{m}/perclient,"
+              f"{r['perclient_s'] / r['clients'] * 1e6:.0f},"
+              f"dispatches={r['perclient_dispatches']}")
+        print(f"pipeline/fleet/{m}/batched,"
+              f"{r['batched_s'] / r['clients'] * 1e6:.0f},"
+              f"dispatches={r['batched_dispatches']}")
+        disp_ratio = (r["perclient_dispatches"]
+                      / max(r["batched_dispatches"], 1))
+        print(f"pipeline/fleet/{m}/dispatch_reduction,0,{disp_ratio:.1f}x")
+        print(f"pipeline/fleet/{m}/speedup,0,"
+              f"{r['perclient_s'] / max(r['batched_s'], 1e-9):.1f}x")
+        print(f"pipeline/fleet/{m}/equal,0,{r['equal']}")
+    return rows + fleet
 
 
 if __name__ == "__main__":

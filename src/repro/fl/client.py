@@ -7,6 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.batched_summary import bucket_size
 from repro.core.summary import encoder_summary, label_distribution, pxy_histogram
 from repro.data.pipeline import batch_iterator
 from repro.utils.tree import tree_sub
@@ -67,14 +68,10 @@ def local_train(runtime: ClientRuntime, global_params, feats, labels, valid,
 _SUMMARY_JIT_CACHE: dict = {}
 
 
-def _bucket(n: int) -> int:
-    """Round dataset size up to a power of two so jitted summary functions
-    are reused across clients instead of retracing per client (§Perf —
-    summary pipeline iteration 1)."""
-    b = 8
-    while b < n:
-        b *= 2
-    return b
+# dataset-size bucketing is shared with the fleet-scale batched engine so
+# the two paths pad identically and stay numerically equivalent (§Perf —
+# summary pipeline iteration 1; DESIGN.md §4)
+_bucket = bucket_size
 
 
 def _jitted_summary(method: str, shapes_key, num_classes, coreset_k, bins,

@@ -7,7 +7,9 @@ Per round:
      paper §2.1),
   3. summary refresh: the registry decides which clients are stale (age or
      cheap-P(y)-drift); stale clients recompute the configured summary —
-     the measured seconds are charged to the simulated clock,
+     by default through the fleet-scale batched engine (one jitted dispatch
+     per shape bucket, DESIGN.md §4) — and the measured seconds are charged
+     to the simulated clock,
   4. (re-)cluster summaries with K-means (or DBSCAN for the baseline),
   5. HACCS selection: per-cluster quotas, fastest available devices,
   6. selected clients run real local SGD in JAX; FedAvg aggregates,
@@ -23,8 +25,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
-    RefreshPolicy, SelectionConfig, SummaryRegistry, dbscan, kmeans,
-    label_distribution, select_devices,
+    BatchedSummaryEngine, RefreshPolicy, SelectionConfig, SummaryRegistry,
+    dbscan, kmeans, label_distribution, minibatch_kmeans, select_devices,
 )
 from repro.data.synthetic import FederatedDataset
 from repro.fl.aggregation import fedavg
@@ -47,7 +49,9 @@ class FLConfig:
     hidden: int = 64
     # --- paper technique ---
     summary: str = "encoder"         # encoder | py | pxy | none
-    clustering: str = "kmeans"       # kmeans | dbscan
+    summary_engine: str = "batched"  # batched (one dispatch per bucket) |
+                                     # perclient (legacy per-client jit loop)
+    clustering: str = "kmeans"       # kmeans | minibatch | dbscan
     num_clusters: int = 8
     coreset_k: int = 64
     encoder_dim: int = 32
@@ -89,6 +93,13 @@ def run_federated(data: FederatedDataset, cfg: FLConfig,
 
     system = SystemModel(spec.num_clients, system_spec or SystemSpec(),
                          seed=cfg.seed + 1)
+    if cfg.summary_engine not in ("batched", "perclient"):
+        raise ValueError(f"unknown summary_engine: {cfg.summary_engine}")
+    engine = None
+    if cfg.summary != "none" and cfg.summary_engine == "batched":
+        engine = BatchedSummaryEngine(
+            cfg.summary, spec.num_classes, encoder_fn=enc_fn,
+            coreset_k=cfg.coreset_k, bins=cfg.bins)
     registry = SummaryRegistry(
         spec.num_clients,
         RefreshPolicy(cfg.refresh_max_age, cfg.refresh_kl))
@@ -120,23 +131,36 @@ def run_federated(data: FederatedDataset, cfg: FLConfig,
             for c in range(spec.num_clients):
                 fresh_lds[c] = data.client_label_dist(c, drift)
             stale = registry.stale_clients(rnd, fresh_lds)
-            for c in stale:
-                feats, labels, valid = data.client_data(c, drift)
-                s, _ld_emp, dt = timed_summary(
-                    cfg.summary, feats, labels, valid, spec.num_classes,
-                    encoder_fn=enc_fn, coreset_k=cfg.coreset_k, bins=cfg.bins,
-                    key=jax.random.PRNGKey(rnd * 100003 + c))
-                # store the same signal we compare against (cheap P(y)), so
-                # the KL drift test fires on real drift, not sampling noise
-                registry.update(c, rnd, s, fresh_lds[c])
-                summary_times[c] = dt
-                wall_summary += dt
+            # store the same signal we compare against (cheap P(y)), so
+            # the KL drift test fires on real drift, not sampling noise
+            if engine is not None:
+                results = engine.summarize_clients(
+                    stale, data.sizes,
+                    lambda c: data.client_data(c, drift),
+                    lambda c: jax.random.PRNGKey(rnd * 100003 + c))
+                for c, res in results.items():
+                    registry.update(c, rnd, res.summary, fresh_lds[c])
+                    summary_times[c] = res.seconds
+                    wall_summary += res.seconds
+            else:
+                for c in stale:
+                    feats, labels, valid = data.client_data(c, drift)
+                    s, _ld_emp, dt = timed_summary(
+                        cfg.summary, feats, labels, valid, spec.num_classes,
+                        encoder_fn=enc_fn, coreset_k=cfg.coreset_k,
+                        bins=cfg.bins,
+                        key=jax.random.PRNGKey(rnd * 100003 + c))
+                    registry.update(c, rnd, s, fresh_lds[c])
+                    summary_times[c] = dt
+                    wall_summary += dt
             if stale and (rnd % cfg.recluster_every == 0 or rnd == 0
                           or len(stale) > spec.num_clients // 4):
                 X = jnp.asarray(registry.matrix(), jnp.float32)
-                if cfg.clustering == "kmeans":
-                    res = kmeans(X, cfg.num_clusters,
-                                 jax.random.PRNGKey(cfg.seed + rnd))
+                if cfg.clustering in ("kmeans", "minibatch"):
+                    cluster_fn = (minibatch_kmeans
+                                  if cfg.clustering == "minibatch" else kmeans)
+                    res = cluster_fn(X, cfg.num_clusters,
+                                     jax.random.PRNGKey(cfg.seed + rnd))
                     assignment = np.asarray(res.assignment, np.int64)
                     num_clusters = cfg.num_clusters
                 else:

@@ -1,7 +1,7 @@
 """Logical-axis sharding rules: shape-aware resolution properties."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 import jax
 from jax.sharding import Mesh, PartitionSpec as P
