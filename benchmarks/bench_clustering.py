@@ -21,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import dbscan, kmeans, minibatch_kmeans
+from repro.stream import OnlineClusterMaintainer, OnlinePolicy
 
 
 def _synth_summaries(rs, n, dim, groups=8, sep=4.0):
@@ -104,6 +105,61 @@ def run_fleet(n: int, dim: int, k_clusters: int = 10, seed: int = 0) -> list:
     return rows
 
 
+def run_online(n: int = 10_000, dim: int = 64, k_clusters: int = 16,
+               rounds: int = 5, drift_frac: float = 0.01,
+               seed: int = 0) -> list:
+    """Low-drift maintenance: per round, ``drift_frac`` of clients move to a
+    new latent group; compare re-running full K-means every round (the
+    ``SummaryRegistry`` + ``kmeans`` baseline) against the online maintainer's
+    assign-only updates (DESIGN.md §5).  Both paths see identical data."""
+    rs = np.random.RandomState(seed)
+    centers = rs.normal(0, 4.0, (k_clusters, dim)).astype(np.float32)
+    g = rs.randint(0, k_clusters, n)
+    x = (centers[g] + rs.normal(0, 1.0, (n, dim)).astype(np.float32))
+    _time(kmeans, jnp.asarray(x), k_clusters, jax.random.PRNGKey(seed))  # warm
+
+    m = OnlineClusterMaintainer(k_clusters, OnlinePolicy(reseed_every=1000))
+    t0 = time.perf_counter()
+    m.refresh(x, np.arange(n), jax.random.PRNGKey(seed))
+    init_s = time.perf_counter() - t0
+
+    n_drift = max(1, int(drift_frac * n))
+    # warm the assign-only path (same drift-set bucket) so timed rounds
+    # measure steady-state maintenance, not first-call compilation
+    m.refresh(x, rs.choice(n, n_drift, replace=False),
+              jax.random.PRNGKey(seed))
+
+    full_s = online_s = 0.0
+    full_inertias, online_inertias = [], []
+    for r in range(rounds):
+        ids = rs.choice(n, n_drift, replace=False)
+        g[ids] = rs.randint(0, k_clusters, n_drift)
+        x[ids] = (centers[g[ids]]
+                  + rs.normal(0, 1.0, (n_drift, dim)).astype(np.float32))
+        t0 = time.perf_counter()
+        res = kmeans(jnp.asarray(x), k_clusters,
+                     jax.random.PRNGKey(seed + 1 + r))
+        jax.block_until_ready(res.centroids)
+        full_s += time.perf_counter() - t0
+        full_inertias.append(float(res.inertia))
+        t0 = time.perf_counter()
+        m.refresh(x, ids, jax.random.PRNGKey(seed + 1 + r))
+        online_s += time.perf_counter() - t0
+        online_inertias.append(m.inertia)
+    # mean-over-rounds: kmeans++ quality is seed-noisy, single-round
+    # inertia comparisons mostly measure seeding luck
+    return [{
+        "name": f"clustering/online-vs-full/n{n}",
+        "pipeline": "online-vs-full", "n": n, "dim": dim,
+        "rounds": rounds, "drift_frac": drift_frac,
+        "full_recluster_s": full_s, "online_s": online_s,
+        "online_init_s": init_s,
+        "full_inertia": float(np.mean(full_inertias)),
+        "online_inertia": float(np.mean(online_inertias)),
+        "full_fits": m.full_fits,
+    }]
+
+
 def main(fast: bool = True):
     scales = ((300, "femnist"), (800, "openimage")) if fast else \
         ((2800, "femnist"), (4000, "openimage"))
@@ -136,6 +192,21 @@ def main(fast: bool = True):
           f"{fleet[0]['seconds'] / max(fleet[1]['seconds'], 1e-9):.1f}x "
           f"(inertia ratio "
           f"{fleet[1]['inertia'] / max(fleet[0]['inertia'], 1e-9):.2f})")
+
+    # online maintenance vs full recluster at >=10k clients (DESIGN.md §5)
+    online = run_online(n=10_000 if fast else 100_000,
+                        rounds=3 if fast else 5)
+    rows += online
+    for r in online:
+        per_round_full = r["full_recluster_s"] / r["rounds"]
+        per_round_online = r["online_s"] / r["rounds"]
+        print(f"{r['name']}/full_per_round,{per_round_full * 1e6:.0f},"
+              f"n={r['n']};dim={r['dim']};drift={r['drift_frac']}")
+        print(f"{r['name']}/online_per_round,{per_round_online * 1e6:.0f},"
+              f"full_fits={r['full_fits']};init_s={r['online_init_s']:.3f}")
+        print(f"{r['name']}/speedup,0,"
+              f"{per_round_full / max(per_round_online, 1e-9):.1f}x "
+              f"(inertia ratio {r['online_inertia'] / max(r['full_inertia'], 1e-9):.3f})")
 
     # paper-scale extrapolation: DBSCAN is O(N²·D); K-means O(N·K·D·iters).
     # Scale the measured times to the paper's client counts and the real

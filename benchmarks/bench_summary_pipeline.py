@@ -7,6 +7,10 @@ for real on this host):
   iteration 2: fleet-scale batched engine (DESIGN.md §4) — stale clients
                stacked into padded [M, N_bucket, ...] buckets, ONE jitted
                vmap dispatch per bucket chunk instead of one per client.
+  iteration 3: server-side registry scan (DESIGN.md §5) — per-client
+               needs_refresh python loop vs one batched sym-KL over [N, C]
+               vs the streaming registry (dense matrices, O(drifted)
+               scatter) at 10k-100k simulated clients.
 
 CSV: pipeline/<...>,us_per_call,derived
 """
@@ -18,7 +22,8 @@ import numpy as np
 
 import jax
 
-from repro.core import BatchedSummaryEngine
+from repro.core import BatchedSummaryEngine, RefreshPolicy, SummaryRegistry
+from repro.stream import StreamingSummaryRegistry
 from repro.data.synthetic import DatasetSpec, FederatedDataset, small_spec
 from repro.fl.client import timed_summary
 from repro.models.cnn import CNNConfig, build_cnn, cnn_apply
@@ -96,6 +101,49 @@ def run_fleet(num_clients: int = 512, methods=("py", "encoder", "pxy"),
     return rows
 
 
+def run_registry(n: int = 20_000, num_classes: int = 62, dim: int = 64,
+                 drift_frac: float = 0.01, seed: int = 0) -> list:
+    """Iteration 3: one server round of refresh decisions + state absorption
+    at fleet scale — the python-loop scan vs the vectorized dict registry vs
+    the streaming registry's batched scan + O(drifted) scatter."""
+    rs = np.random.RandomState(seed)
+    policy = RefreshPolicy(max_age_rounds=10 ** 6, kl_threshold=0.05)
+    dists = rs.dirichlet([0.5] * num_classes, n).astype(np.float32)
+    summaries = rs.rand(n, dim).astype(np.float32)
+
+    base = SummaryRegistry(n, policy)
+    stream = StreamingSummaryRegistry(n, policy)
+    for c in range(n):
+        base.update(c, 0, summaries[c], dists[c])
+    stream.update_batch(np.arange(n), 0, summaries, dists)
+
+    # low drift: a few % of clients move, the rest stay put
+    fresh = dists.copy()
+    ids = rs.choice(n, max(1, int(drift_frac * n)), replace=False)
+    fresh[ids] = rs.dirichlet([0.5] * num_classes, ids.size) \
+        .astype(np.float32)
+
+    t0 = time.perf_counter()
+    loop_stale = [c for c in range(n)
+                  if base.needs_refresh(c, 1, fresh[c])]
+    loop_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    vec_stale = base.stale_clients(1, fresh)
+    vec_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    stream_stale = stream.stale_clients(1, fresh)
+    stream.update_batch(stream_stale, 1,
+                        summaries[stream_stale], fresh[stream_stale])
+    _ = stream.matrix()                      # zero-copy clustering handoff
+    stream_s = time.perf_counter() - t0
+    assert loop_stale == vec_stale == stream_stale.tolist()
+    return [{
+        "name": f"pipeline/registry/n{n}", "n": n, "num_classes": num_classes,
+        "stale": len(loop_stale), "loop_s": loop_s, "vectorized_s": vec_s,
+        "streaming_s": stream_s,
+    }]
+
+
 def main(fast: bool = True):
     rows = run(num_clients=6 if fast else 16)
     by = {}
@@ -126,7 +174,18 @@ def main(fast: bool = True):
         print(f"pipeline/fleet/{m}/speedup,0,"
               f"{r['perclient_s'] / max(r['batched_s'], 1e-9):.1f}x")
         print(f"pipeline/fleet/{m}/equal,0,{r['equal']}")
-    return rows + fleet
+
+    # registry scan at fleet scale (DESIGN.md §5)
+    reg = run_registry(n=20_000 if fast else 100_000)
+    for r in reg:
+        print(f"{r['name']}/loop,{r['loop_s'] * 1e6:.0f},"
+              f"n={r['n']};stale={r['stale']}")
+        print(f"{r['name']}/vectorized,{r['vectorized_s'] * 1e6:.0f},"
+              f"{r['loop_s'] / max(r['vectorized_s'], 1e-9):.1f}x_vs_loop")
+        print(f"{r['name']}/streaming,{r['streaming_s'] * 1e6:.0f},"
+              f"{r['loop_s'] / max(r['streaming_s'], 1e-9):.1f}x_vs_loop "
+              f"(scan + O(drifted) scatter + zero-copy matrix)")
+    return rows + fleet + reg
 
 
 if __name__ == "__main__":

@@ -5,15 +5,23 @@
 Prints ``name,us_per_call,derived`` CSV lines:
   * bench_summary     — paper Table 2 (left): summary computation time
   * bench_clustering  — paper Table 2 (right): device clustering time
+                        (+ online maintenance vs full recluster, §5)
   * bench_selection   — paper §2 / HACCS: time-to-accuracy of selection
   * bench_kernels     — Pallas kernel hot spots vs oracles
   * bench_dryrun      — §Roofline table from dry-run artifacts (if present)
+
+and mirrors every CSV record into a machine-readable ``BENCH_pr2.json``
+(``--json PATH`` to relocate, ``--no-json`` to disable) so the perf
+trajectory is tracked across PRs.
 
 Default sizes are CPU-budget-friendly; --full uses paper-scale settings.
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
+import io
+import json
 import sys
 import time
 import traceback
@@ -39,28 +47,84 @@ BENCHES = (
 )
 
 
+class _Tee(io.TextIOBase):
+    """Mirror bench stdout while keeping a copy to parse into JSON."""
+
+    def __init__(self, out):
+        self.out = out
+        self.captured = io.StringIO()
+
+    def write(self, s):
+        self.out.write(s)
+        self.captured.write(s)
+        return len(s)
+
+    def flush(self):
+        self.out.flush()
+
+
+def parse_records(text: str) -> list[dict]:
+    """CSV ``name,us_per_call,derived`` lines -> record dicts (comment and
+    header lines are skipped; malformed lines are ignored, not fatal)."""
+    records = []
+    for line in text.splitlines():
+        line = line.strip()
+        if not line or line.startswith("#") or line.startswith("name,"):
+            continue
+        parts = line.split(",", 2)
+        if len(parts) < 2:
+            continue
+        try:
+            us = float(parts[1])
+        except ValueError:
+            continue
+        records.append({"name": parts[0], "us_per_call": us,
+                        "derived": parts[2] if len(parts) > 2 else ""})
+    return records
+
+
 def main(argv=None) -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--full", action="store_true",
                    help="paper-scale sizes (slow)")
     p.add_argument("--only", default="",
                    help="comma-separated bench names to run")
+    p.add_argument("--json", default="BENCH_pr2.json",
+                   help="machine-readable output path")
+    p.add_argument("--no-json", action="store_true",
+                   help="skip writing the JSON mirror")
     args = p.parse_args(argv)
     only = set(filter(None, args.only.split(",")))
 
     print("name,us_per_call,derived")
     failures = []
+    report: dict = {"schema": 1, "full": bool(args.full), "benches": {}}
     for name, fn in BENCHES:
         if only and name not in only:
             continue
         t0 = time.time()
         print(f"# --- {name} ---", flush=True)
+        tee = _Tee(sys.stdout)
+        ok = True
         try:
-            fn(fast=not args.full)
+            with contextlib.redirect_stdout(tee):
+                fn(fast=not args.full)
         except Exception:  # noqa: BLE001 — keep the harness running
             failures.append(name)
+            ok = False
             traceback.print_exc()
-        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+        dt = time.time() - t0
+        report["benches"][name] = {
+            "ok": ok,
+            "seconds": round(dt, 3),
+            "records": parse_records(tee.captured.getvalue()),
+        }
+        print(f"# {name} done in {dt:.1f}s", flush=True)
+    report["failures"] = failures
+    if not args.no_json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"# wrote {args.json}", flush=True)
     if failures:
         print(f"# FAILED: {','.join(failures)}", file=sys.stderr)
         sys.exit(1)

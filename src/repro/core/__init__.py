@@ -16,7 +16,12 @@ from repro.core.kmeans import (  # noqa: F401
     minibatch_kmeans,
     pairwise_sq_dist,
 )
-from repro.core.scheduler import RefreshPolicy, SummaryRegistry, sym_kl  # noqa: F401
+from repro.core.scheduler import (  # noqa: F401
+    RefreshPolicy,
+    SummaryRegistry,
+    batch_sym_kl,
+    sym_kl,
+)
 from repro.core.selection import SelectionConfig, cluster_quotas, select_devices  # noqa: F401
 from repro.core.summary import (  # noqa: F401
     encoder_summary,

@@ -11,6 +11,12 @@ Table 2).  A client's expensive encoder summary is refreshed when
 
 — which is how the cheap summary and the paper's efficient summary compose
 into an adaptive refresh policy instead of a fixed period.
+
+``SummaryRegistry`` is the exact-behavior baseline: ``needs_refresh`` is the
+per-client reference predicate, and the hot ``stale_clients`` scan is a
+single batched symmetric-KL over an ``[N, C]`` matrix instead of a Python
+loop (DESIGN.md §5 — ``repro.stream.StreamingSummaryRegistry`` takes the
+same vectorization further by dropping the per-client dicts entirely).
 """
 from __future__ import annotations
 
@@ -25,6 +31,21 @@ def sym_kl(p: np.ndarray, q: np.ndarray, eps: float = 1e-9) -> float:
     p = p / p.sum()
     q = q / q.sum()
     return float(0.5 * (np.sum(p * np.log(p / q)) + np.sum(q * np.log(q / p))))
+
+
+def batch_sym_kl(p: np.ndarray, q: np.ndarray, eps: float = 1e-9) -> np.ndarray:
+    """Row-wise symmetric KL: ``[N, C] x [N, C] -> [N]``.
+
+    Elementwise math mirrors ``sym_kl`` exactly (same eps, same dtype
+    promotion, same reduction axis) so a batched scan reproduces the
+    per-client loop's decisions bit-for-bit.
+    """
+    p = np.asarray(p) + eps
+    q = np.asarray(q) + eps
+    p = p / p.sum(axis=-1, keepdims=True)
+    q = q / q.sum(axis=-1, keepdims=True)
+    return 0.5 * (np.sum(p * np.log(p / q), axis=-1)
+                  + np.sum(q * np.log(q / p), axis=-1))
 
 
 @dataclasses.dataclass
@@ -43,6 +64,10 @@ class SummaryRegistry:
         self.label_dists: dict[int, np.ndarray] = {}
         self.last_refresh = np.full(num_clients, -(10 ** 9), np.int64)
         self.refresh_count = 0
+        # dense mirror of ``label_dists`` so the stale scan is one batched
+        # sym-KL instead of N python-level calls (allocated on first update)
+        self._ld_matrix: np.ndarray | None = None
+        self._has = np.zeros(num_clients, bool)
 
     def needs_refresh(self, client: int, round_idx: int,
                       fresh_label_dist: np.ndarray) -> bool:
@@ -54,8 +79,21 @@ class SummaryRegistry:
         return drift > self.policy.kl_threshold
 
     def stale_clients(self, round_idx: int, fresh_label_dists) -> list:
-        return [c for c in range(self.num_clients)
-                if self.needs_refresh(c, round_idx, fresh_label_dists[c])]
+        fresh = np.asarray([fresh_label_dists[c]
+                            for c in range(self.num_clients)])
+        return np.flatnonzero(
+            self.stale_mask(round_idx, fresh)).tolist()
+
+    def stale_mask(self, round_idx: int,
+                   fresh_label_dists: np.ndarray) -> np.ndarray:
+        """Vectorized refresh decisions: ``[N, C]`` fresh P(y) -> ``[N]``
+        bool, equal to ``needs_refresh`` evaluated per client."""
+        missing = ~self._has
+        aged = (round_idx - self.last_refresh) >= self.policy.max_age_rounds
+        if self._ld_matrix is None:
+            return missing | aged
+        drift = batch_sym_kl(self._ld_matrix, fresh_label_dists)
+        return missing | aged | (drift > self.policy.kl_threshold)
 
     def update(self, client: int, round_idx: int, summary: np.ndarray,
                label_dist: np.ndarray) -> None:
@@ -63,6 +101,12 @@ class SummaryRegistry:
         self.label_dists[client] = np.asarray(label_dist)
         self.last_refresh[client] = round_idx
         self.refresh_count += 1
+        if self._ld_matrix is None:
+            self._ld_matrix = np.zeros(
+                (self.num_clients, len(self.label_dists[client])),
+                self.label_dists[client].dtype)
+        self._ld_matrix[client] = self.label_dists[client]
+        self._has[client] = True
 
     def matrix(self) -> np.ndarray:
         """Stack all summaries into the clustering input [N, D]."""

@@ -10,7 +10,9 @@ Per round:
      by default through the fleet-scale batched engine (one jitted dispatch
      per shape bucket, DESIGN.md §4) — and the measured seconds are charged
      to the simulated clock,
-  4. (re-)cluster summaries with K-means (or DBSCAN for the baseline),
+  4. (re-)cluster summaries with K-means (or DBSCAN for the baseline; the
+     ``online`` mode keeps assignments fresh with O(drifted) work per round
+     and only refits when inertia degrades — DESIGN.md §5),
   5. HACCS selection: per-cluster quotas, fastest available devices,
   6. selected clients run real local SGD in JAX; FedAvg aggregates,
   7. evaluate on the global test set; advance the simulated clock.
@@ -27,6 +29,9 @@ import numpy as np
 from repro.core import (
     BatchedSummaryEngine, RefreshPolicy, SelectionConfig, SummaryRegistry,
     dbscan, kmeans, label_distribution, minibatch_kmeans, select_devices,
+)
+from repro.stream import (
+    OnlineClusterMaintainer, OnlinePolicy, StreamingSummaryRegistry,
 )
 from repro.data.synthetic import FederatedDataset
 from repro.fl.aggregation import fedavg
@@ -51,7 +56,13 @@ class FLConfig:
     summary: str = "encoder"         # encoder | py | pxy | none
     summary_engine: str = "batched"  # batched (one dispatch per bucket) |
                                      # perclient (legacy per-client jit loop)
-    clustering: str = "kmeans"       # kmeans | minibatch | dbscan
+    registry: str = "dict"           # dict (baseline SummaryRegistry) |
+                                     # streaming (dense [N,·] matrices,
+                                     # batched drift scan, DESIGN.md §5)
+    clustering: str = "kmeans"       # kmeans | minibatch | dbscan |
+                                     # online (assign-only maintenance)
+    online_inertia_ratio: float = 1.5   # online: full-refit trigger
+    online_reseed_every: int = 8        # online: split/merge cadence
     num_clusters: int = 8
     coreset_k: int = 64
     encoder_dim: int = 32
@@ -100,9 +111,20 @@ def run_federated(data: FederatedDataset, cfg: FLConfig,
         engine = BatchedSummaryEngine(
             cfg.summary, spec.num_classes, encoder_fn=enc_fn,
             coreset_k=cfg.coreset_k, bins=cfg.bins)
-    registry = SummaryRegistry(
-        spec.num_clients,
-        RefreshPolicy(cfg.refresh_max_age, cfg.refresh_kl))
+    policy = RefreshPolicy(cfg.refresh_max_age, cfg.refresh_kl)
+    if cfg.registry == "streaming":
+        registry = StreamingSummaryRegistry(
+            spec.num_clients, policy, num_classes=spec.num_classes)
+    elif cfg.registry == "dict":
+        registry = SummaryRegistry(spec.num_clients, policy)
+    else:
+        raise ValueError(f"unknown registry: {cfg.registry}")
+    maintainer = None
+    if cfg.clustering == "online":
+        maintainer = OnlineClusterMaintainer(
+            cfg.num_clusters,
+            OnlinePolicy(inertia_ratio=cfg.online_inertia_ratio,
+                         reseed_every=cfg.online_reseed_every))
     sel_cfg = SelectionConfig(cfg.clients_per_round, cfg.selection)
 
     test_x, test_y = data.test_set()
@@ -130,7 +152,7 @@ def run_federated(data: FederatedDataset, cfg: FLConfig,
             fresh_lds = {}
             for c in range(spec.num_clients):
                 fresh_lds[c] = data.client_label_dist(c, drift)
-            stale = registry.stale_clients(rnd, fresh_lds)
+            stale = [int(c) for c in registry.stale_clients(rnd, fresh_lds)]
             # store the same signal we compare against (cheap P(y)), so
             # the KL drift test fires on real drift, not sampling noise
             if engine is not None:
@@ -139,9 +161,18 @@ def run_federated(data: FederatedDataset, cfg: FLConfig,
                     lambda c: data.client_data(c, drift),
                     lambda c: jax.random.PRNGKey(rnd * 100003 + c))
                 for c, res in results.items():
-                    registry.update(c, rnd, res.summary, fresh_lds[c])
                     summary_times[c] = res.seconds
                     wall_summary += res.seconds
+                if isinstance(registry, StreamingSummaryRegistry):
+                    if results:
+                        ids = list(results)
+                        registry.update_batch(
+                            ids, rnd,
+                            np.stack([results[c].summary for c in ids]),
+                            np.stack([fresh_lds[c] for c in ids]))
+                else:
+                    for c, res in results.items():
+                        registry.update(c, rnd, res.summary, fresh_lds[c])
             else:
                 for c in stale:
                     feats, labels, valid = data.client_data(c, drift)
@@ -153,8 +184,19 @@ def run_federated(data: FederatedDataset, cfg: FLConfig,
                     registry.update(c, rnd, s, fresh_lds[c])
                     summary_times[c] = dt
                     wall_summary += dt
-            if stale and (rnd % cfg.recluster_every == 0 or rnd == 0
-                          or len(stale) > spec.num_clients // 4):
+            if maintainer is not None:
+                # online maintenance: assign-only for the drifted set every
+                # round; the maintainer escalates to a full refit itself
+                if stale or maintainer.centroids is None:
+                    maintainer.refresh(
+                        np.asarray(registry.matrix(), np.float32),
+                        np.asarray(stale, np.int64),
+                        jax.random.PRNGKey(cfg.seed + rnd))
+                if maintainer.assignment is not None:
+                    assignment = maintainer.assignment
+                    num_clusters = cfg.num_clusters
+            elif stale and (rnd % cfg.recluster_every == 0 or rnd == 0
+                            or len(stale) > spec.num_clients // 4):
                 X = jnp.asarray(registry.matrix(), jnp.float32)
                 if cfg.clustering in ("kmeans", "minibatch"):
                     cluster_fn = (minibatch_kmeans
@@ -195,4 +237,7 @@ def run_federated(data: FederatedDataset, cfg: FLConfig,
 
     history["final_acc"] = history["acc"][-1]
     history["params"] = params
+    if maintainer is not None:
+        history["online_cluster"] = {"full_fits": maintainer.full_fits,
+                                     "reseeds": maintainer.reseeds}
     return history

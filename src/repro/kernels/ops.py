@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from repro.kernels.class_hist import class_hist_kernel
 from repro.kernels.pairwise_dist import pairwise_dist_kernel
 from repro.kernels.seg_mean import seg_mean_kernel
+from repro.kernels.sketch_update import sketch_update_kernel
 
 
 def _interpret() -> bool:
@@ -52,6 +53,18 @@ def seg_mean(feats, labels, keep, num_classes: int, *, bn: int = 256):
     kp = _pad_to(keep, 0, bn, value=False)
     return seg_mean_kernel(fp, lp, kp, num_classes, bn=bn,
                            interpret=_interpret())
+
+
+def sketch_update(labels, seg, valid, num_slots: int, width: int,
+                  a: tuple, b: tuple, *, bn: int = 256):
+    """[N] labels / slot ids / valid -> [M, R, W] count-min increments."""
+    n = labels.shape[0]
+    bn = min(bn, max(8, n))
+    lp = _pad_to(labels, 0, bn)
+    sp = _pad_to(seg, 0, bn)
+    vp = _pad_to(valid, 0, bn, value=False)
+    return sketch_update_kernel(lp, sp, vp, num_slots, width, tuple(a),
+                                tuple(b), bn=bn, interpret=_interpret())
 
 
 def class_hist(q, labels, valid, num_classes: int, bins: int, *,

@@ -28,6 +28,18 @@ def seg_mean_ref(feats, labels, keep, num_classes: int):
     return sums / jnp.maximum(counts, 1.0)[:, None]
 
 
+def sketch_update_ref(labels, seg, valid, num_slots: int, width: int,
+                      a: tuple, b: tuple, prime: int = 131_071):
+    """[N] labels/slot-ids/valid -> [M, R, W] fp32 count-min increments."""
+    av = jnp.asarray(a, jnp.int32)[None, :]
+    bv = jnp.asarray(b, jnp.int32)[None, :]
+    h = ((labels[:, None] * av + bv) % prime) % width          # [N, R]
+    oh_b = jax.nn.one_hot(h, width, dtype=jnp.float32)         # [N, R, W]
+    oh_s = jax.nn.one_hot(jnp.where(valid, seg, num_slots), num_slots,
+                          dtype=jnp.float32)                   # [N, M]
+    return jnp.einsum("nm,nrw->mrw", oh_s, oh_b)
+
+
 def class_hist_ref(q, labels, valid, num_classes: int, bins: int):
     """Quantized features [N,D] int32 -> per-class histograms [C,D,B] fp32."""
     oh_label = jax.nn.one_hot(jnp.where(valid, labels, num_classes),

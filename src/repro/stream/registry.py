@@ -1,0 +1,116 @@
+"""Vectorized streaming summary registry (DESIGN.md §5).
+
+Drop-in replacement for the ``core.scheduler.SummaryRegistry`` hot path at
+fleet scale: instead of dict-of-arrays state and per-client Python calls,
+the whole fleet lives in preallocated dense matrices
+
+    summaries   [N, D]  float32    (the clustering input, zero-copy)
+    label_dists [N, C]  float32    (the cheap drift signal)
+    last_refresh [N]    int64
+    has_summary  [N]    bool
+
+so one round of server work is: ONE batched symmetric-KL over ``[N, C]``
+(`core.scheduler.batch_sym_kl`) to find the O(drifted) refresh set, an
+O(drifted) row scatter to absorb the recomputed summaries, and a zero-copy
+``matrix()`` handoff to clustering (the dict registry re-stacks all N rows
+on every recluster).
+
+Decision semantics are *identical* to ``SummaryRegistry.needs_refresh`` —
+asserted round-for-round by ``tests/test_stream.py``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.scheduler import RefreshPolicy, batch_sym_kl, sym_kl
+
+
+class StreamingSummaryRegistry:
+    """Fleet-scale server-side store of client summaries + refresh state."""
+
+    def __init__(self, num_clients: int, policy: RefreshPolicy,
+                 summary_dim: int | None = None,
+                 num_classes: int | None = None):
+        self.policy = policy
+        self.num_clients = num_clients
+        self.refresh_count = 0
+        self.last_refresh = np.full(num_clients, -(10 ** 9), np.int64)
+        self.has_summary = np.zeros(num_clients, bool)
+        # matrices allocate lazily on first update when dims aren't known
+        self.summaries = (np.zeros((num_clients, summary_dim), np.float32)
+                          if summary_dim else None)
+        self.label_dists = (np.zeros((num_clients, num_classes), np.float32)
+                            if num_classes else None)
+
+    # ------------------------------------------------------------------
+    # refresh decisions
+
+    def stale_mask(self, round_idx: int,
+                   fresh_label_dists: np.ndarray) -> np.ndarray:
+        """[N, C] fresh P(y) -> [N] bool refresh decisions, one batched
+        sym-KL for the whole fleet."""
+        missing = ~self.has_summary
+        aged = (round_idx - self.last_refresh) >= self.policy.max_age_rounds
+        if self.label_dists is None:
+            return missing | aged
+        drift = batch_sym_kl(self.label_dists,
+                             np.asarray(fresh_label_dists, np.float32))
+        return missing | aged | (drift > self.policy.kl_threshold)
+
+    def stale_clients(self, round_idx: int, fresh_label_dists) -> np.ndarray:
+        """O(drifted) refresh set (int64 ids).  Accepts an ``[N, C]`` array
+        or anything indexable by client id (dict registry compat)."""
+        fresh = fresh_label_dists
+        if not isinstance(fresh, np.ndarray) or fresh.ndim != 2:
+            fresh = np.asarray([fresh_label_dists[c]
+                                for c in range(self.num_clients)])
+        return np.flatnonzero(self.stale_mask(round_idx, fresh))
+
+    def needs_refresh(self, client: int, round_idx: int,
+                      fresh_label_dist: np.ndarray) -> bool:
+        """Per-client reference predicate (same contract as the baseline)."""
+        if not self.has_summary[client]:
+            return True
+        if round_idx - self.last_refresh[client] >= self.policy.max_age_rounds:
+            return True
+        drift = sym_kl(self.label_dists[client], fresh_label_dist)
+        return drift > self.policy.kl_threshold
+
+    # ------------------------------------------------------------------
+    # updates
+
+    def _ensure(self, summary_dim: int, num_classes: int) -> None:
+        if self.summaries is None:
+            self.summaries = np.zeros((self.num_clients, summary_dim),
+                                      np.float32)
+        if self.label_dists is None:
+            self.label_dists = np.zeros((self.num_clients, num_classes),
+                                        np.float32)
+
+    def update_batch(self, client_ids, round_idx: int, summaries,
+                     label_dists) -> None:
+        """Absorb one refresh round: ``[M, D]`` summaries / ``[M, C]``
+        label dists scatter into the fleet matrices (O(M), no scan)."""
+        ids = np.asarray(client_ids, np.int64)
+        if ids.size == 0:
+            return
+        summaries = np.asarray(summaries, np.float32)
+        label_dists = np.asarray(label_dists, np.float32)
+        self._ensure(summaries.shape[-1], label_dists.shape[-1])
+        self.summaries[ids] = summaries
+        self.label_dists[ids] = label_dists
+        self.last_refresh[ids] = round_idx
+        self.has_summary[ids] = True
+        self.refresh_count += ids.size
+
+    def update(self, client: int, round_idx: int, summary: np.ndarray,
+               label_dist: np.ndarray) -> None:
+        self.update_batch([client], round_idx, summary[None], label_dist[None])
+
+    # ------------------------------------------------------------------
+
+    def matrix(self) -> np.ndarray:
+        """The clustering input [N, D] — the live array, no re-stacking."""
+        assert self.summaries is not None and self.has_summary.all(), \
+            "missing summaries"
+        return self.summaries
