@@ -1,8 +1,12 @@
 """End-to-end selection quality (paper §2: HACCS's 18–38 % training-time
 reduction mechanism): simulated time-to-accuracy of cluster-aware selection
-vs random / fastest-only selection under system heterogeneity.
+vs random / fastest-only selection under system heterogeneity — plus the
+scenario sweep (DESIGN.md §6): every named fleet preset run through the
+registry x clustering support matrix with per-round coverage/overhead/
+dropout metrics.
 
 CSV: strategy,final_acc,sim_time_to_target,refreshes
+     scenario/<preset>/<registry>-<clustering>,0,final_acc=..;kl_cov=..;...
 """
 from __future__ import annotations
 
@@ -11,6 +15,7 @@ import numpy as np
 from repro.data.synthetic import FederatedDataset, small_spec
 from repro.fl import FLConfig, run_federated
 from repro.fl.system import SystemSpec
+from repro.sim import DATA_HINTS, PRESET_NAMES, make_scenario
 
 
 def _time_to(history, target):
@@ -45,6 +50,48 @@ def run(rounds: int = 16, clients: int = 60, target_acc: float = 0.85,
     return rows
 
 
+SCENARIO_COMBOS = (("dict", "kmeans"), ("dict", "minibatch"),
+                   ("streaming", "kmeans"), ("streaming", "online"))
+
+
+def run_scenarios(rounds: int = 8, clients: int = 48, seed: int = 0,
+                  combos=SCENARIO_COMBOS, presets=PRESET_NAMES) -> list:
+    """Every scenario preset through the registry x clustering support
+    matrix; per-round metrics aggregated into one record per cell."""
+    rows = []
+    for preset in presets:
+        alpha = DATA_HINTS[preset].get("alpha", 0.5)
+        data = FederatedDataset(small_spec(num_clients=clients, num_classes=8,
+                                           side=10, avg_samples=48,
+                                           num_styles=4, alpha=alpha),
+                                seed=seed)
+        for registry, clustering in combos:
+            scenario = make_scenario(preset, clients, seed=seed)
+            cfg = FLConfig(rounds=rounds, clients_per_round=8, local_steps=4,
+                           summary="py", registry=registry,
+                           clustering=clustering, num_clusters=6,
+                           recluster_every=4, refresh_kl=0.05,
+                           eval_every=max(rounds - 1, 1), seed=seed)
+            h = run_federated(data, cfg, scenario=scenario)
+            kl = np.asarray(h["kl_coverage"], np.float64)
+            rows.append({
+                "name": f"scenario/{preset}/{registry}-{clustering}",
+                "preset": preset,
+                "registry": registry,
+                "clustering": clustering,
+                "final_acc": h["final_acc"],
+                "kl_coverage": (float(np.nanmean(kl))
+                                if np.isfinite(kl).any() else float("nan")),
+                "summary_s": float(sum(h["wall_summary_s"])),
+                "dropped": int(sum(h["dropped"])),
+                "dropped_rounds": h["dropped_rounds"],
+                "sim_time": h["sim_time"][-1],
+                "refreshes": h["refreshes"][-1],
+                "mean_active": float(np.mean(h["n_active"])),
+            })
+    return rows
+
+
 def main(fast: bool = True):
     rows = run(rounds=8 if fast else 20, clients=30 if fast else 80,
                target_acc=0.7 if fast else 0.85)
@@ -57,7 +104,19 @@ def main(fast: bool = True):
     if np.isfinite(ours["t_to_target"]) and np.isfinite(base["t_to_target"]):
         red = 1 - ours["t_to_target"] / base["t_to_target"]
         print(f"selection/time_reduction_vs_random,0,{red * 100:.1f}%")
-    return rows
+
+    fast_combos = (("dict", "kmeans"), ("streaming", "online"))
+    sc_rows = run_scenarios(
+        rounds=4 if fast else 12, clients=32 if fast else 96,
+        combos=fast_combos if fast else SCENARIO_COMBOS)
+    for r in sc_rows:
+        print(f"{r['name']},0,final_acc={r['final_acc']:.3f};"
+              f"kl_cov={r['kl_coverage']:.4f};dropped={r['dropped']};"
+              f"dropped_rounds={r['dropped_rounds']};"
+              f"summary_s={r['summary_s']:.3f};"
+              f"sim_time={r['sim_time']:.1f};refreshes={r['refreshes']};"
+              f"mean_active={r['mean_active']:.1f}")
+    return rows + sc_rows
 
 
 if __name__ == "__main__":

@@ -96,9 +96,14 @@ def main(argv=None) -> None:
     args = p.parse_args(argv)
     only = set(filter(None, args.only.split(",")))
 
+    from repro.sim import PRESET_NAMES
+
     print("name,us_per_call,derived")
     failures = []
-    report: dict = {"schema": 1, "full": bool(args.full), "benches": {}}
+    # schema 2: adds scenario_presets + scenario/<preset>/<reg>-<clus>
+    # records inside the selection bench (validated by CI)
+    report: dict = {"schema": 2, "full": bool(args.full),
+                    "scenario_presets": list(PRESET_NAMES), "benches": {}}
     for name, fn in BENCHES:
         if only and name not in only:
             continue

@@ -42,10 +42,15 @@ def cluster_quotas(assignment: np.ndarray, num_clusters: int,
 
 def select_devices(assignment: np.ndarray, num_clusters: int,
                    speeds: np.ndarray, available: np.ndarray,
-                   cfg: SelectionConfig, rng: np.random.Generator) -> np.ndarray:
-    """Return selected device indices for one round."""
+                   cfg: SelectionConfig, rng: np.random.Generator,
+                   active: np.ndarray | None = None) -> np.ndarray:
+    """Return selected device indices for one round.  ``active`` (scenario
+    fleet membership) further restricts the candidate pool — a client that
+    left the fleet is never selected even if its availability bit is on."""
     n = assignment.shape[0]
     ok = available.astype(bool)
+    if active is not None:
+        ok = ok & np.asarray(active, bool)
     if cfg.strategy == "random":
         pool = np.flatnonzero(ok)
         take = min(cfg.per_round, pool.size)

@@ -92,6 +92,18 @@ class FederatedDataset:
         p = (1 - drift) * self.label_dists[cid] + drift * self.drift_dists[cid]
         return p / p.sum()
 
+    def client_label_dists(self, drift) -> np.ndarray:
+        """All clients' current P(y) in one vectorized op: scalar or [N]
+        ``drift`` -> [N, C].  Float32 weights match numpy's weak scalar
+        promotion, so rows equal ``client_label_dist`` bitwise — the round
+        loop's per-round drift signal without N Python calls."""
+        d = np.broadcast_to(np.asarray(drift, np.float64),
+                            (self.spec.num_clients,))
+        w_new = d.astype(np.float32)[:, None]
+        w_old = (1.0 - d).astype(np.float32)[:, None]
+        p = w_old * self.label_dists + w_new * self.drift_dists
+        return p / p.sum(axis=-1, keepdims=True)
+
     def client_data(self, cid: int, drift: float = 0.0, pad_to: int = 0):
         """Returns (features [n(,pad), H, W, C], labels [n], valid [n])."""
         spec = self.spec

@@ -1,26 +1,35 @@
 """The federated round loop — HACCS workflow (paper Fig. 1) with the paper's
-efficient summaries as a first-class feature.
+efficient summaries as a first-class feature, driven by a fleet
+``Scenario`` (DESIGN.md §6).
 
 Per round:
-  1. system tick (availability + speed drift),
-  2. drift schedule moves client label distributions (non-stationarity,
-     paper §2.1),
-  3. summary refresh: the registry decides which clients are stale (age or
-     cheap-P(y)-drift); stale clients recompute the configured summary —
-     by default through the fleet-scale batched engine (one jitted dispatch
-     per shape bucket, DESIGN.md §4) — and the measured seconds are charged
-     to the simulated clock,
-  4. (re-)cluster summaries with K-means (or DBSCAN for the baseline; the
-     ``online`` mode keeps assignments fresh with O(drifted) work per round
-     and only refits when inertia degrades — DESIGN.md §5),
-  5. HACCS selection: per-cluster quotas, fastest available devices,
-  6. selected clients run real local SGD in JAX; FedAvg aggregates,
-  7. evaluate on the global test set; advance the simulated clock.
+  1. the scenario emits a ``RoundPlan``: fleet membership (churn), per-device
+     speeds/availability, label-drift positions, deadline and dropout draws,
+  2. departed clients are evicted from the summary registry,
+  3. summary refresh: the registry decides which *active* clients are stale
+     (age or cheap-P(y)-drift); stale clients recompute the configured
+     summary — by default through the fleet-scale batched engine (one jitted
+     dispatch per shape bucket, DESIGN.md §4) — and the measured seconds are
+     charged to the simulated clock,
+  4. (re-)cluster the summaries of active clients with K-means (or DBSCAN;
+     ``online`` keeps assignments fresh with O(drifted) work per round and
+     only refits when inertia degrades — DESIGN.md §5),
+  5. HACCS selection: per-cluster quotas, fastest available devices —
+     restricted to the current fleet,
+  6. deadline semantics: selected clients whose summary + compute + upload
+     time exceeds the round deadline are dropped (straggler timeout), as are
+     mid-round dropouts; survivors run real local SGD in JAX and FedAvg
+     aggregates whatever arrived,
+  7. evaluate on the global test set; advance the simulated clock (the full
+     deadline is charged when any selected client missed it).
+
+``scenario=None`` reproduces the fixed-fleet PR-2 behavior bit-for-bit via
+``LegacySystemScenario`` (same ``SystemModel`` RNG stream, no churn, no
+deadline) — the baseline the differential tests pin against.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +37,7 @@ import numpy as np
 
 from repro.core import (
     BatchedSummaryEngine, RefreshPolicy, SelectionConfig, SummaryRegistry,
-    dbscan, kmeans, label_distribution, minibatch_kmeans, select_devices,
+    dbscan, kmeans, minibatch_kmeans, select_devices, sym_kl,
 )
 from repro.stream import (
     OnlineClusterMaintainer, OnlinePolicy, StreamingSummaryRegistry,
@@ -37,9 +46,10 @@ from repro.data.synthetic import FederatedDataset
 from repro.fl.aggregation import fedavg
 from repro.fl.client import ClientRuntime, local_train, timed_summary
 from repro.fl.models import make_classifier, xent_loss
-from repro.fl.system import SystemModel, SystemSpec
+from repro.fl.system import SystemModel, SystemSpec, completion_times
 from repro.models.cnn import CNNConfig, build_cnn, cnn_apply
 from repro.optim import sgd
+from repro.sim.scenario import RoundPlan
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,7 +81,7 @@ class FLConfig:
     recluster_every: int = 10
     refresh_max_age: int = 20
     refresh_kl: float = 0.1
-    # --- non-stationarity ---
+    # --- non-stationarity (legacy path; scenarios carry their own) ---
     drift_start: int = 10 ** 9       # round when drift begins
     drift_per_round: float = 0.0
     # --- eval ---
@@ -79,13 +89,90 @@ class FLConfig:
     seed: int = 0
 
 
-def _drift(cfg: FLConfig, rnd: int) -> float:
-    return float(np.clip((rnd - cfg.drift_start) * cfg.drift_per_round, 0, 1))
+class LegacySystemScenario:
+    """Adapter: the PR-2 fixed-fleet ``SystemModel`` behavior expressed as a
+    scenario.  Same seed ⇒ the same speed walk and availability draws as the
+    old round loop, every client always in the fleet, no deadline, no churn
+    — so ``run_federated(..., scenario=None)`` is bit-identical to before.
+    """
+
+    def __init__(self, num_clients: int, system_spec: SystemSpec, seed: int,
+                 drift_start: int, drift_per_round: float):
+        self.num_clients = num_clients
+        self.system_spec = system_spec
+        self.seed = seed
+        self.drift_start = drift_start
+        self.drift_per_round = drift_per_round
+        self._empty = np.zeros(0, np.int64)
+        self.reset()
+
+    def reset(self) -> None:
+        """Rebuild the SystemModel from (spec, seed) — same RNG stream, so
+        a reset adapter replays the identical availability/speed trace."""
+        self.system = SystemModel(self.num_clients, self.system_spec,
+                                  seed=self.seed)
+
+    def round_plan(self, rnd: int) -> RoundPlan:
+        n = self.num_clients
+        avail = self.system.tick()
+        drift = float(np.clip((rnd - self.drift_start) * self.drift_per_round,
+                              0, 1))
+        return RoundPlan(
+            round_idx=rnd,
+            active=np.ones(n, bool),
+            available=avail,
+            speeds=self.system.speeds.copy(),   # tick() mutates in place;
+                                                # stored plans must not alias
+            drift=np.full(n, drift),
+            joined=self._empty,
+            departed=self._empty,
+            fail_u=np.ones(n),
+            upload_cost=np.zeros(n),
+            deadline=None,
+            dropout_prob=0.0,
+            step_cost=self.system.spec.step_cost,
+            summary_cost=None,           # charge measured wall seconds
+        )
+
+    def note_selected(self, ids) -> None:
+        pass
+
+    def to_config(self) -> dict:
+        """Full state for an exact rebuild via ``from_config`` (the
+        ``legacy: True`` marker makes ``sim.Scenario.from_config`` reject
+        this dict loudly instead of building a different fleet)."""
+        return {"name": "legacy-system", "legacy": True,
+                "num_clients": self.num_clients, "seed": self.seed,
+                "system_spec": dataclasses.asdict(self.system_spec),
+                "drift_start": self.drift_start,
+                "drift_per_round": self.drift_per_round}
+
+    @classmethod
+    def from_config(cls, d: dict) -> "LegacySystemScenario":
+        return cls(int(d["num_clients"]),
+                   SystemSpec(**d.get("system_spec", {})),
+                   seed=int(d["seed"]), drift_start=int(d["drift_start"]),
+                   drift_per_round=float(d["drift_per_round"]))
 
 
 def run_federated(data: FederatedDataset, cfg: FLConfig,
-                  system_spec: SystemSpec | None = None) -> dict:
+                  system_spec: SystemSpec | None = None,
+                  scenario=None) -> dict:
     spec = data.spec
+    if scenario is None:
+        scenario = LegacySystemScenario(
+            spec.num_clients, system_spec or SystemSpec(), seed=cfg.seed + 1,
+            drift_start=cfg.drift_start, drift_per_round=cfg.drift_per_round)
+    else:
+        if system_spec is not None:
+            raise ValueError(
+                "system_spec and scenario are mutually exclusive — a "
+                "scenario carries its own device/system model")
+        if scenario.num_clients != spec.num_clients:
+            raise ValueError(
+                f"scenario models {scenario.num_clients} clients but the "
+                f"dataset has {spec.num_clients}")
+        scenario.reset()
     rng = np.random.RandomState(cfg.seed)
     key = jax.random.PRNGKey(cfg.seed)
 
@@ -102,8 +189,6 @@ def run_federated(data: FederatedDataset, cfg: FLConfig,
     enc_params = build_cnn(enc_cfg, jax.random.PRNGKey(7))
     enc_fn = jax.jit(lambda imgs: cnn_apply(enc_params, imgs))
 
-    system = SystemModel(spec.num_clients, system_spec or SystemSpec(),
-                         seed=cfg.seed + 1)
     if cfg.summary_engine not in ("batched", "perclient"):
         raise ValueError(f"unknown summary_engine: {cfg.summary_engine}")
     engine = None
@@ -138,27 +223,31 @@ def run_federated(data: FederatedDataset, cfg: FLConfig,
     assignment = np.zeros(spec.num_clients, np.int64)
     num_clusters = 1
     history = {"round": [], "acc": [], "sim_time": [], "refreshes": [],
-               "wall_summary_s": [], "selected": []}
+               "wall_summary_s": [], "selected": [], "completed": [],
+               "dropped": [], "kl_coverage": [], "n_active": [],
+               "n_joined": [], "n_departed": []}
     sim_time = 0.0
+    dropped_rounds = 0
 
     for rnd in range(cfg.rounds):
-        avail = system.tick()
-        drift = _drift(cfg, rnd)
+        plan = scenario.round_plan(rnd)
+        for c in plan.departed:
+            registry.remove(int(c))
+        drift = plan.drift
+        # cheap drift signal: current P(y) for every client (pure, no RNG)
+        fresh = data.client_label_dists(drift)
         summary_times: dict[int, float] = {}
         wall_summary = 0.0
 
         if cfg.summary != "none" and cfg.selection == "haccs":
-            # cheap drift signal: current P(y) for every client
-            fresh_lds = {}
-            for c in range(spec.num_clients):
-                fresh_lds[c] = data.client_label_dist(c, drift)
-            stale = [int(c) for c in registry.stale_clients(rnd, fresh_lds)]
+            stale = [int(c) for c in np.flatnonzero(
+                registry.stale_mask(rnd, fresh, active=plan.active))]
             # store the same signal we compare against (cheap P(y)), so
             # the KL drift test fires on real drift, not sampling noise
             if engine is not None:
                 results = engine.summarize_clients(
                     stale, data.sizes,
-                    lambda c: data.client_data(c, drift),
+                    lambda c: data.client_data(c, float(drift[c])),
                     lambda c: jax.random.PRNGKey(rnd * 100003 + c))
                 for c, res in results.items():
                     summary_times[c] = res.seconds
@@ -169,63 +258,123 @@ def run_federated(data: FederatedDataset, cfg: FLConfig,
                         registry.update_batch(
                             ids, rnd,
                             np.stack([results[c].summary for c in ids]),
-                            np.stack([fresh_lds[c] for c in ids]))
+                            fresh[ids])
                 else:
                     for c, res in results.items():
-                        registry.update(c, rnd, res.summary, fresh_lds[c])
+                        registry.update(c, rnd, res.summary, fresh[c])
             else:
                 for c in stale:
-                    feats, labels, valid = data.client_data(c, drift)
+                    feats, labels, valid = data.client_data(c, float(drift[c]))
                     s, _ld_emp, dt = timed_summary(
                         cfg.summary, feats, labels, valid, spec.num_classes,
                         encoder_fn=enc_fn, coreset_k=cfg.coreset_k,
                         bins=cfg.bins,
                         key=jax.random.PRNGKey(rnd * 100003 + c))
-                    registry.update(c, rnd, s, fresh_lds[c])
+                    registry.update(c, rnd, s, fresh[c])
                     summary_times[c] = dt
                     wall_summary += dt
+
+            churned = plan.joined.size > 0 or plan.departed.size > 0
             if maintainer is not None:
                 # online maintenance: assign-only for the drifted set every
-                # round; the maintainer escalates to a full refit itself
-                if stale or maintainer.centroids is None:
+                # round; the maintainer escalates to a full refit itself.
+                # Rows keep fleet indexing (zeros for absent clients) so the
+                # maintainer's state stays aligned under churn.
+                if stale or churned or maintainer.centroids is None:
+                    drifted = np.asarray(stale, np.int64)
+                    if churned:
+                        drifted = np.union1d(
+                            drifted, np.concatenate([plan.joined,
+                                                     plan.departed]))
                     maintainer.refresh(
-                        np.asarray(registry.matrix(), np.float32),
-                        np.asarray(stale, np.int64),
-                        jax.random.PRNGKey(cfg.seed + rnd))
+                        np.asarray(registry.dense(), np.float32),
+                        drifted, jax.random.PRNGKey(cfg.seed + rnd),
+                        live=registry.has_mask() & plan.active)
                 if maintainer.assignment is not None:
                     assignment = maintainer.assignment
                     num_clusters = cfg.num_clusters
             elif stale and (rnd % cfg.recluster_every == 0 or rnd == 0
-                            or len(stale) > spec.num_clients // 4):
-                X = jnp.asarray(registry.matrix(), jnp.float32)
+                            or len(stale) > spec.num_clients // 4
+                            or churned):
+                have_ids = np.flatnonzero(registry.has_mask() & plan.active)
+                X = jnp.asarray(registry.matrix_rows(have_ids), jnp.float32)
+                assignment = np.full(spec.num_clients, -1, np.int64)
                 if cfg.clustering in ("kmeans", "minibatch"):
                     cluster_fn = (minibatch_kmeans
                                   if cfg.clustering == "minibatch" else kmeans)
                     res = cluster_fn(X, cfg.num_clusters,
                                      jax.random.PRNGKey(cfg.seed + rnd))
-                    assignment = np.asarray(res.assignment, np.int64)
+                    assignment[have_ids] = np.asarray(res.assignment, np.int64)
                     num_clusters = cfg.num_clusters
                 else:
                     med = float(jnp.median(jnp.sqrt(
                         jnp.sum(jnp.square(X - X.mean(0)), -1))))
                     res = dbscan(X, eps=med * 0.5, min_samples=3)
-                    assignment = np.asarray(res.labels, np.int64)
+                    assignment[have_ids] = np.asarray(res.labels, np.int64)
                     num_clusters = max(int(res.num_clusters), 1)
 
-        selected = select_devices(assignment, num_clusters, system.speeds,
-                                  avail, sel_cfg, rng)
+        # selection sees only the current fleet: clients without a live
+        # summary row (departed / just joined between reclusters) fall out
+        # of cluster quotas, absent clients out of the candidate pool
+        if cfg.selection == "haccs" and cfg.summary != "none":
+            sel_assignment = assignment.copy()
+            sel_assignment[~(registry.has_mask() & plan.active)] = -1
+        else:
+            sel_assignment = assignment
+        selected = select_devices(sel_assignment, num_clusters, plan.speeds,
+                                  plan.available, sel_cfg, rng,
+                                  active=plan.active)
+        scenario.note_selected(selected)
+
+        sel = np.asarray(selected, np.int64)
+        if sel.size:
+            if plan.summary_cost is None:
+                # legacy accounting: measured wall seconds on the critical
+                # path (nondeterministic — only sound without a deadline)
+                t = completion_times(plan.speeds, sel, cfg.local_steps,
+                                     plan.step_cost, summary_times)
+            else:
+                # modeled summary cost: deterministic, so deadline
+                # decisions and the sim clock replay exactly
+                refreshed = np.asarray([float(int(i) in summary_times)
+                                        for i in sel])
+                t = (completion_times(plan.speeds, sel, cfg.local_steps,
+                                      plan.step_cost)
+                     + plan.summary_cost * refreshed / plan.speeds[sel])
+            t = t + plan.upload_cost[sel]
+            failed = plan.fail_u[sel] < plan.dropout_prob
+            timed_out = (t > plan.deadline if plan.deadline is not None
+                         else np.zeros(sel.size, bool))
+            completed = ~(failed | timed_out)
+            t_round = (float(plan.deadline)
+                       if plan.deadline is not None
+                       and (timed_out.any() or failed.any())
+                       else float(np.max(t)))
+        else:
+            completed = np.zeros(0, bool)
+            t_round = 0.0
 
         deltas, sizes = [], []
-        for c in selected:
-            feats, labels, valid = data.client_data(int(c), drift)
+        for i, c in enumerate(sel):
+            if not completed[i]:
+                continue
+            feats, labels, valid = data.client_data(int(c), float(drift[c]))
             delta, n, _ = local_train(runtime, params, feats, labels, valid,
                                       cfg.local_steps, rng)
             deltas.append(delta)
             sizes.append(n)
         params = fedavg(params, deltas, sizes)
+        if sel.size and not completed.any():
+            dropped_rounds += 1
 
-        sim_time += system.round_time(np.asarray(selected), cfg.local_steps,
-                                      summary_times)
+        # selected-client KL coverage: how far the aggregated clients' label
+        # mixture sits from the active fleet's (lower = better coverage)
+        act_ids = np.flatnonzero(plan.active)
+        comp_ids = sel[completed] if sel.size else sel
+        kl_cov = (sym_kl(fresh[comp_ids].mean(0), fresh[act_ids].mean(0))
+                  if comp_ids.size and act_ids.size else float("nan"))
+
+        sim_time += t_round
         if rnd % cfg.eval_every == 0 or rnd == cfg.rounds - 1:
             acc = float(evaluate(params))
         history["round"].append(rnd)
@@ -233,10 +382,18 @@ def run_federated(data: FederatedDataset, cfg: FLConfig,
         history["sim_time"].append(sim_time)
         history["refreshes"].append(registry.refresh_count)
         history["wall_summary_s"].append(wall_summary)
-        history["selected"].append(np.asarray(selected).tolist())
+        history["selected"].append(sel.tolist())
+        history["completed"].append(sel[completed].tolist())
+        history["dropped"].append(int(sel.size - completed.sum()))
+        history["kl_coverage"].append(kl_cov)
+        history["n_active"].append(int(plan.active.sum()))
+        history["n_joined"].append(int(plan.joined.size))
+        history["n_departed"].append(int(plan.departed.size))
 
     history["final_acc"] = history["acc"][-1]
     history["params"] = params
+    history["dropped_rounds"] = dropped_rounds
+    history["scenario"] = scenario.to_config()
     if maintainer is not None:
         history["online_cluster"] = {"full_fits": maintainer.full_fits,
                                      "reseeds": maintainer.reseeds}

@@ -41,8 +41,21 @@ class SystemModel:
                    summary_times: dict[int, float] | None = None) -> float:
         if selected.size == 0:
             return 0.0
-        t = self.spec.step_cost * local_steps / self.speeds[selected]
-        if summary_times:
-            t = t + np.asarray([summary_times.get(int(i), 0.0)
-                                for i in selected])
-        return float(np.max(t))
+        return float(np.max(completion_times(
+            self.speeds, selected, local_steps, self.spec.step_cost,
+            summary_times)))
+
+
+def completion_times(speeds: np.ndarray, selected: np.ndarray,
+                     local_steps: int, step_cost: float,
+                     summary_times: dict[int, float] | None = None
+                     ) -> np.ndarray:
+    """Per-selected-device compute (+ optional measured summary) times —
+    the one implementation shared by ``SystemModel.round_time`` and the
+    scenario round loop, so the legacy clock stays bit-identical by
+    construction."""
+    t = step_cost * local_steps / speeds[selected]
+    if summary_times:
+        t = t + np.asarray([summary_times.get(int(i), 0.0)
+                            for i in selected])
+    return t

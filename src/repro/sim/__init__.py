@@ -1,0 +1,19 @@
+"""Fleet scenario engine (DESIGN.md §6): device profiles, seeded and
+replayable heterogeneity scenarios (availability, churn, deadlines, label
+drift), and named presets swept by benchmarks and the differential test
+harness."""
+from repro.sim.presets import (  # noqa: F401
+    DATA_HINTS,
+    PRESET_NAMES,
+    make_scenario,
+)
+from repro.sim.profiles import (  # noqa: F401
+    PROFILES,
+    DeviceProfile,
+    get_profile,
+)
+from repro.sim.scenario import (  # noqa: F401
+    RoundPlan,
+    Scenario,
+    ScenarioConfig,
+)

@@ -1,0 +1,78 @@
+"""Named scenario presets (DESIGN.md §6) — the scenario-diversity axis the
+benchmarks and the differential harness sweep.
+
+Each preset is a ``ScenarioConfig`` factory plus optional *data hints*
+(e.g. a Dirichlet alpha) that examples/benchmarks may apply when building
+the synthetic federation; the scenario itself only models the system side.
+
+  uniform-iid   homogeneous always-on fleet, no churn/drift — the control
+  pathological-noniid   stable fleet, aggressive staggered label drift and
+                a very skewed data partition — stresses the sym-KL scan
+  diurnal       day/night availability waves with per-client timezones
+  mobile-churn  phones joining/leaving constantly, slow uplinks, mid-round
+                dropouts, a round deadline — the paper's fleet-scale regime
+  straggler     heavy-tailed speeds + tight deadline: timeout semantics
+                dominate selection quality
+"""
+from __future__ import annotations
+
+from repro.sim.scenario import Scenario, ScenarioConfig
+
+# Dirichlet alpha hints for the data partition that pairs naturally with
+# each preset (purely advisory — scenario math never reads them).
+DATA_HINTS: dict[str, dict] = {
+    "uniform-iid": {"alpha": 10.0},
+    "pathological-noniid": {"alpha": 0.1},
+    "diurnal": {"alpha": 0.5},
+    "mobile-churn": {"alpha": 0.5},
+    "straggler": {"alpha": 0.5},
+}
+
+
+def _preset_config(name: str, num_clients: int, seed: int) -> ScenarioConfig:
+    common = dict(name=name, num_clients=num_clients, seed=seed)
+    if name == "uniform-iid":
+        return ScenarioConfig(
+            tiers=(("phone-mid", 1.0),), speed_sigma=0.1, speed_drift=0.0,
+            base_availability=1.0, **common)
+    if name == "pathological-noniid":
+        return ScenarioConfig(
+            tiers=(("phone-high", 0.3), ("phone-mid", 0.5),
+                   ("phone-low", 0.2)),
+            base_availability=0.9,
+            drift_kind="staggered", drift_start=2, drift_rate=0.2,
+            drift_stagger=6, **common)
+    if name == "diurnal":
+        return ScenarioConfig(
+            tiers=(("phone-high", 0.25), ("phone-mid", 0.5),
+                   ("phone-low", 0.25)),
+            diurnal_amplitude=0.9, diurnal_period=12,
+            drift_kind="ramp", drift_start=6, drift_rate=0.1, **common)
+    if name == "mobile-churn":
+        return ScenarioConfig(
+            tiers=(("phone-mid", 0.4), ("phone-low", 0.6)),
+            initial_fleet_frac=0.6, join_rate=0.08, depart_rate=0.06,
+            dropout_prob=0.1, deadline=40.0, payload=2.0, battery=True,
+            drift_kind="ramp", drift_start=4, drift_rate=0.15, **common)
+    if name == "straggler":
+        return ScenarioConfig(
+            tiers=(("edge-box", 0.1), ("phone-mid", 0.5),
+                   ("phone-low", 0.4)),
+            speed_sigma=1.2, deadline=18.0, dropout_prob=0.05,
+            drift_kind="step", drift_start=5, **common)
+    raise ValueError(f"unknown scenario preset {name!r}; "
+                     f"known: {sorted(PRESET_NAMES)}")
+
+
+PRESET_NAMES = ("uniform-iid", "pathological-noniid", "diurnal",
+                "mobile-churn", "straggler")
+
+
+def make_scenario(name: str, num_clients: int, seed: int = 0,
+                  **overrides) -> Scenario:
+    """Build a preset scenario; ``overrides`` patch any ScenarioConfig
+    field (e.g. ``deadline=None`` to disable timeouts in a quick run)."""
+    cfg = _preset_config(name, num_clients, seed)
+    if overrides:
+        cfg = ScenarioConfig.from_dict({**cfg.to_dict(), **overrides})
+    return Scenario(cfg)

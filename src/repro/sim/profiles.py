@@ -1,0 +1,58 @@
+"""Device profiles — the per-client system-heterogeneity axis (DESIGN.md §6).
+
+FL selection surveys (arXiv 2207.03681, 2211.01549) stress that selection
+strategies can only be compared under an explicit model of *system*
+heterogeneity: how fast a device computes, how fat its uplink is, and how
+often it is reachable at all.  A ``DeviceProfile`` captures one device
+class; a scenario mixes profiles by weight to build a fleet.
+
+Units are simulated-time units (the same clock ``fl.system.SystemModel``
+charges): ``compute`` multiplies device speed (work units per sim-second),
+``bandwidth`` is payload units per sim-second for the model upload, and the
+battery fields drive an availability feedback loop — each round of
+participation drains ``drain`` units, ``recharge`` units come back per
+round, and a device below ``drain`` cannot participate.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceProfile:
+    name: str
+    compute: float            # speed multiplier (1.0 = reference device)
+    bandwidth: float          # payload units per sim-second (uplink)
+    availability: float       # base per-round reachability probability
+    battery_capacity: float = 8.0   # participation-units of charge
+    recharge: float = 1.0           # charge recovered per round
+    drain: float = 1.0              # charge consumed per participation
+
+
+# Canonical tiers — roughly a flagship phone, a mid-range phone, a budget /
+# aging device, and a plugged-in edge box.  Scenarios reference these by
+# name so a config dict round-trips through JSON.
+PHONE_HIGH = DeviceProfile("phone-high", compute=2.0, bandwidth=4.0,
+                           availability=0.9, battery_capacity=12.0,
+                           recharge=1.5)
+PHONE_MID = DeviceProfile("phone-mid", compute=1.0, bandwidth=2.0,
+                          availability=0.85)
+PHONE_LOW = DeviceProfile("phone-low", compute=0.35, bandwidth=0.6,
+                          availability=0.7, battery_capacity=5.0,
+                          recharge=0.8)
+EDGE_BOX = DeviceProfile("edge-box", compute=3.0, bandwidth=8.0,
+                         availability=0.98, battery_capacity=1e9,
+                         recharge=1e9, drain=0.0)
+
+PROFILES: dict[str, DeviceProfile] = {
+    p.name: p for p in (PHONE_HIGH, PHONE_MID, PHONE_LOW, EDGE_BOX)
+}
+
+
+def get_profile(name: str) -> DeviceProfile:
+    try:
+        return PROFILES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown device profile {name!r}; known: {sorted(PROFILES)}"
+        ) from None

@@ -1,0 +1,256 @@
+"""Heterogeneous fleet scenario engine (DESIGN.md §6).
+
+A ``Scenario`` turns a plain config dict into a deterministic, replayable
+per-round schedule of *system* state for a fleet of ``num_clients``
+devices:
+
+  * **device profiles** — each client is drawn from a weighted mix of
+    ``profiles.DeviceProfile`` tiers (compute, bandwidth, battery,
+    availability) with per-device lognormal speed jitter and a per-round
+    speed random walk;
+  * **availability traces** — per-tier base reachability, optionally
+    modulated by a diurnal sinusoid with a per-client timezone phase, and
+    gated by a battery model that drains on participation;
+  * **churn** — clients join mid-run (with no summary on the server) and
+    depart (their registry rows must be evicted) at configured per-round
+    rates;
+  * **round-deadline semantics** — a sim-time budget per round; selected
+    clients whose summary + compute + upload time exceeds it are dropped
+    (straggler timeout), and ``dropout_prob`` models mid-round failures
+    (battery death, network loss) independent of speed;
+  * **label drift schedules** — per-client drift positions in [0, 1] fed
+    to ``data.synthetic.FederatedDataset`` so the registry's sym-KL
+    staleness scan is exercised under non-stationary data.
+
+Determinism contract: a ``Scenario`` is a pure function of its config —
+two instances built from the same config produce identical ``RoundPlan``
+sequences (asserted by ``tests/test_scenario.py``).  Plans must be
+consumed sequentially from round 0 (``reset()`` rewinds).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.sim.profiles import DeviceProfile, get_profile
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioConfig:
+    """Everything a scenario needs, as a JSON-round-trippable record."""
+    name: str = "custom"
+    num_clients: int = 100
+    seed: int = 0
+    # --- device mix ---
+    tiers: tuple = (("phone-mid", 1.0),)   # (profile name, weight) pairs
+    speed_sigma: float = 0.4               # per-device lognormal jitter
+    speed_drift: float = 0.02              # per-round speed random walk
+    # --- availability ---
+    base_availability: float | None = None  # override per-tier availability
+    diurnal_amplitude: float = 0.0          # 0 = flat; 1 = full day/night
+    diurnal_period: int = 24                # rounds per simulated day
+    diurnal_timezones: int = 4              # adjacent 1-round-apart phase
+                                            # clusters (a regional fleet) —
+                                            # phases uniform over the whole
+                                            # period would cancel the
+                                            # fleet-level wave
+    battery: bool = False                   # enable battery gating
+    # --- round semantics ---
+    deadline: float | None = None          # sim-time budget per round
+    dropout_prob: float = 0.0              # mid-round failure probability
+    payload: float = 1.0                   # upload payload (units)
+    summary_cost: float = 1.0              # work units per summary refresh —
+                                           # a *modeled* cost (charged as
+                                           # summary_cost / speed) so deadline
+                                           # decisions and the sim clock stay
+                                           # deterministic and replayable
+    # --- churn ---
+    initial_fleet_frac: float = 1.0        # fraction present at round 0
+    join_rate: float = 0.0                 # P(absent client joins) per round
+    depart_rate: float = 0.0               # P(present client departs) / round
+    # --- label drift schedule ---
+    drift_kind: str = "none"               # none | ramp | step | staggered
+    drift_start: int = 0
+    drift_rate: float = 0.0                # drift position gained per round
+    drift_max: float = 1.0
+    drift_stagger: int = 0                 # staggered: max per-client offset
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["tiers"] = [list(t) for t in self.tiers]
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ScenarioConfig":
+        d = dict(d)
+        if "tiers" in d:
+            d["tiers"] = tuple((str(n), float(w)) for n, w in d["tiers"])
+        return cls(**d)
+
+
+@dataclasses.dataclass
+class RoundPlan:
+    """One round's system state — everything the round loop consumes."""
+    round_idx: int
+    active: np.ndarray        # [N] bool: member of the fleet this round
+    available: np.ndarray     # [N] bool: active AND reachable this round
+    speeds: np.ndarray        # [N] float: device speed multipliers
+    drift: np.ndarray         # [N] float: label-drift position in [0, 1]
+    joined: np.ndarray        # ids that joined this round (no summary yet)
+    departed: np.ndarray      # ids that departed this round (evict rows)
+    fail_u: np.ndarray        # [N] float: uniform draws for mid-round dropout
+    upload_cost: np.ndarray   # [N] float: payload / bandwidth sim-seconds
+    deadline: float | None    # sim-time round budget (None = unbounded)
+    dropout_prob: float
+    step_cost: float = 1.0    # work units per local step
+    summary_cost: float | None = 1.0   # modeled work units per summary
+                                       # refresh (charged as cost/speed);
+                                       # None = charge *measured* wall
+                                       # seconds (legacy adapter — only
+                                       # sound without a deadline)
+
+
+class Scenario:
+    """Seeded, deterministic, replayable fleet scenario."""
+
+    def __init__(self, config: ScenarioConfig):
+        if not config.tiers:
+            raise ValueError("scenario needs at least one device tier")
+        self.config = config
+        self.num_clients = config.num_clients
+        self._profiles: list[DeviceProfile] = [
+            get_profile(name) for name, _w in config.tiers]
+        self.reset()
+
+    # ------------------------------------------------------------------
+    # config round-trip
+
+    def to_config(self) -> dict:
+        return self.config.to_dict()
+
+    @classmethod
+    def from_config(cls, d: dict) -> "Scenario":
+        if d.get("legacy") or d.get("name") == "legacy-system":
+            raise ValueError(
+                "this is a legacy-system adapter config; rebuild it with "
+                "repro.fl.rounds.LegacySystemScenario.from_config")
+        return cls(ScenarioConfig.from_dict(d))
+
+    # ------------------------------------------------------------------
+
+    def reset(self) -> None:
+        """Rewind to round 0 — a fresh instance and a reset one are
+        indistinguishable (same seed, same draw order)."""
+        cfg = self.config
+        n = cfg.num_clients
+        rng = np.random.RandomState(cfg.seed)
+        weights = np.asarray([w for _n, w in cfg.tiers], np.float64)
+        weights = weights / weights.sum()
+        self.tier_of = rng.choice(len(self._profiles), size=n, p=weights)
+
+        def per_tier(attr):
+            return np.asarray([getattr(self._profiles[t], attr)
+                               for t in self.tier_of], np.float64)
+
+        self._compute = per_tier("compute")
+        self._bandwidth = per_tier("bandwidth")
+        self._avail_base = (np.full(n, cfg.base_availability, np.float64)
+                            if cfg.base_availability is not None
+                            else per_tier("availability"))
+        self._capacity = per_tier("battery_capacity")
+        self._recharge = per_tier("recharge")
+        self._drain = per_tier("drain")
+        self._battery = self._capacity.copy()
+
+        self.speeds = self._compute * rng.lognormal(0.0, cfg.speed_sigma, n)
+        tz = rng.randint(0, max(cfg.diurnal_timezones, 1), n)
+        self._phase = tz + rng.uniform(0.0, 1.0, n)
+        self._drift_offset = (rng.randint(0, cfg.drift_stagger + 1, n)
+                              if cfg.drift_kind == "staggered"
+                              else np.zeros(n, np.int64))
+        self.active = rng.rand(n) < cfg.initial_fleet_frac
+        if not self.active.any():            # never start with an empty fleet
+            self.active[int(rng.randint(n))] = True
+        self._rng = rng
+        self._round = 0
+
+    # ------------------------------------------------------------------
+
+    def _drift_at(self, rnd: int) -> np.ndarray:
+        cfg = self.config
+        n = cfg.num_clients
+        if cfg.drift_kind == "none":
+            return np.zeros(n)
+        if cfg.drift_kind == "ramp":
+            d = np.clip((rnd - cfg.drift_start) * cfg.drift_rate,
+                        0.0, cfg.drift_max)
+            return np.full(n, d)
+        if cfg.drift_kind == "step":
+            return np.full(n, cfg.drift_max if rnd >= cfg.drift_start else 0.0)
+        if cfg.drift_kind == "staggered":
+            start = cfg.drift_start + self._drift_offset
+            return np.clip((rnd - start) * cfg.drift_rate, 0.0, cfg.drift_max)
+        raise ValueError(f"unknown drift_kind: {cfg.drift_kind}")
+
+    def round_plan(self, rnd: int) -> RoundPlan:
+        """Advance one round.  Must be called sequentially from round 0."""
+        if rnd != self._round:
+            raise RuntimeError(
+                f"round_plan({rnd}) out of order (expected {self._round}); "
+                "scenarios are sequential — reset() to replay")
+        cfg = self.config
+        n = cfg.num_clients
+        rng = self._rng
+
+        # speed random walk (every device, every round — fixed draw count)
+        self.speeds = self.speeds * np.exp(
+            rng.normal(0.0, cfg.speed_drift, n))
+
+        # churn: draws happen for all N clients so the stream is fixed
+        u_join = rng.rand(n)
+        u_depart = rng.rand(n)
+        joined = (~self.active) & (u_join < cfg.join_rate)
+        departed = self.active & (u_depart < cfg.depart_rate)
+        if (departed.sum() >= self.active.sum()) and not joined.any():
+            departed[:] = False          # never drain the fleet to zero
+        self.active = (self.active | joined) & ~departed
+
+        # availability: tier base x diurnal modulation x battery gate
+        p = self._avail_base.copy()
+        if cfg.diurnal_amplitude > 0.0:
+            mod = (1.0 - cfg.diurnal_amplitude) + cfg.diurnal_amplitude * 0.5 \
+                * (1.0 + np.sin(2.0 * np.pi * (rnd + self._phase)
+                                / max(cfg.diurnal_period, 1)))
+            p = p * mod
+        if cfg.battery:
+            self._battery = np.minimum(self._battery + self._recharge,
+                                       self._capacity)
+            p = p * (self._battery >= self._drain)
+        available = self.active & (rng.rand(n) < p)
+
+        fail_u = rng.rand(n)
+        self._round = rnd + 1
+        return RoundPlan(
+            round_idx=rnd,
+            active=self.active.copy(),
+            available=available,
+            speeds=self.speeds.copy(),
+            drift=self._drift_at(rnd),
+            joined=np.flatnonzero(joined),
+            departed=np.flatnonzero(departed),
+            fail_u=fail_u,
+            upload_cost=cfg.payload / np.maximum(self._bandwidth, 1e-9),
+            deadline=cfg.deadline,
+            dropout_prob=cfg.dropout_prob,
+            summary_cost=cfg.summary_cost,
+        )
+
+    def note_selected(self, ids) -> None:
+        """Battery feedback: participation drains charge (no-op unless the
+        scenario models batteries)."""
+        if self.config.battery:
+            ids = np.asarray(ids, np.int64)
+            if ids.size:
+                self._battery[ids] = np.maximum(
+                    self._battery[ids] - self._drain[ids], 0.0)

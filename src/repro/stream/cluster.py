@@ -69,6 +69,7 @@ class OnlineClusterMaintainer:
         self.full_fits = 0
         self.reseeds = 0
         self._refreshes = 0
+        self._live: np.ndarray | None = None   # rows that are real clients
 
     # ------------------------------------------------------------------
 
@@ -90,38 +91,54 @@ class OnlineClusterMaintainer:
         return (np.asarray(a[:m], np.int64).copy(),
                 np.asarray(d[:m]).copy())
 
-    def full_fit(self, x: np.ndarray, key) -> dict:
-        res = kmeans(jnp.asarray(x, jnp.float32), self.k, key,
+    def _live_mask(self, n: int, live) -> np.ndarray:
+        if live is None:
+            return np.ones(n, bool)
+        return np.asarray(live, bool)
+
+    def full_fit(self, x: np.ndarray, key, live=None) -> dict:
+        """Fit on the live rows only (under churn the fleet matrix carries
+        zero rows for absent clients — clustering them would park a
+        centroid on the origin); every row still gets an assignment so
+        indexing stays stable, but absent rows carry zero inertia."""
+        live = self._live_mask(x.shape[0], live)
+        res = kmeans(jnp.asarray(x[live], jnp.float32), self.k, key,
                      max_iters=self.policy.max_iters,
                      use_kernel=self.policy.use_kernel)
         self.centroids = np.array(res.centroids)       # writable copy
-        self.assignment = np.array(res.assignment, np.int64)
-        _, self.dists = self._assign(x)
-        self.last_full_inertia = float(res.inertia)
+        self.assignment, self.dists = self._assign(x)
+        self.assignment[live] = np.asarray(res.assignment, np.int64)
+        self.dists[~live] = 0.0
+        self.last_full_inertia = float(res.inertia)    # live-row objective
         self.full_fits += 1
+        self._live = live
         return {"mode": "full", "inertia": self.inertia}
 
     # ------------------------------------------------------------------
 
-    def refresh(self, x: np.ndarray, drifted_ids, key) -> dict:
+    def refresh(self, x: np.ndarray, drifted_ids, key, live=None) -> dict:
         """Absorb one round: ``x`` is the full [N, D] summary matrix (rows
-        outside ``drifted_ids`` unchanged since the last call)."""
+        outside ``drifted_ids`` unchanged since the last call); ``live``
+        marks the rows that are real clients this round."""
         n = x.shape[0]
+        live = self._live_mask(n, live)
         if (self.centroids is None or self.assignment is None
                 or self.assignment.shape[0] != n):
-            return self.full_fit(x, key)
+            return self.full_fit(x, key, live=live)
         self._refreshes += 1
+        self._live = live
 
         drifted = np.asarray(drifted_ids, np.int64)
         if drifted.size:
             a, d = self._assign(x[drifted])
             self.assignment[drifted] = a
             self.dists[drifted] = d
+        self.dists[~live] = 0.0          # absent rows carry no inertia
 
         threshold = (self.policy.inertia_ratio * self.last_full_inertia
-                     + self.policy.inertia_slack * n)
+                     + self.policy.inertia_slack * int(live.sum()))
         if self.inertia > threshold:
-            return self.full_fit(x, key)
+            return self.full_fit(x, key, live=live)
 
         if self._refreshes % self.policy.reseed_every == 0:
             return self._split_merge(x)
@@ -131,11 +148,16 @@ class OnlineClusterMaintainer:
 
     def _split_merge(self, x: np.ndarray) -> dict:
         """Merge the two closest centroids, re-seed the freed slot inside
-        the worst cluster, keep the move only if J improves."""
+        the worst cluster, keep the move only if J improves.  Counts and
+        candidates come from live rows only — absent (zero) rows must not
+        weight merges or become re-seed points."""
         k = self.k
         if k < 2:
             return {"mode": "online", "inertia": self.inertia}
-        counts = np.bincount(self.assignment, minlength=k).astype(np.float64)
+        live = getattr(self, "_live", None)
+        live = self._live_mask(self.assignment.shape[0], live)
+        counts = np.bincount(self.assignment[live],
+                             minlength=k).astype(np.float64)
         per_cluster_j = np.bincount(self.assignment, weights=self.dists,
                                     minlength=k)
         worst = int(per_cluster_j.argmax())
@@ -151,11 +173,12 @@ class OnlineClusterMaintainer:
         merged = ((counts[i] * self.centroids[i]
                    + counts[j] * self.centroids[j])
                   / max(w, 1.0)).astype(self.centroids.dtype)
-        members = np.flatnonzero(self.assignment == worst)
+        members = np.flatnonzero((self.assignment == worst) & live)
         far = members[int(self.dists[members].argmax())]
         self.centroids[i] = merged
         self.centroids[j] = x[far]
         self.assignment, self.dists = self._assign(x)   # one full pass
+        self.dists[~live] = 0.0
         self.reseeds += 1
         if self.inertia >= old[3]:                       # no improvement
             self.centroids, self.assignment, self.dists, _ = old

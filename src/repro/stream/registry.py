@@ -46,25 +46,33 @@ class StreamingSummaryRegistry:
     # refresh decisions
 
     def stale_mask(self, round_idx: int,
-                   fresh_label_dists: np.ndarray) -> np.ndarray:
+                   fresh_label_dists: np.ndarray,
+                   active: np.ndarray | None = None) -> np.ndarray:
         """[N, C] fresh P(y) -> [N] bool refresh decisions, one batched
-        sym-KL for the whole fleet."""
+        sym-KL for the whole fleet.  ``active`` (scenario availability
+        threading) keeps absent clients out of the refresh set."""
         missing = ~self.has_summary
         aged = (round_idx - self.last_refresh) >= self.policy.max_age_rounds
         if self.label_dists is None:
-            return missing | aged
-        drift = batch_sym_kl(self.label_dists,
-                             np.asarray(fresh_label_dists, np.float32))
-        return missing | aged | (drift > self.policy.kl_threshold)
+            mask = missing | aged
+        else:
+            drift = batch_sym_kl(self.label_dists,
+                                 np.asarray(fresh_label_dists, np.float32))
+            mask = missing | aged | (drift > self.policy.kl_threshold)
+        if active is not None:
+            mask = mask & np.asarray(active, bool)
+        return mask
 
-    def stale_clients(self, round_idx: int, fresh_label_dists) -> np.ndarray:
+    def stale_clients(self, round_idx: int, fresh_label_dists,
+                      active: np.ndarray | None = None) -> np.ndarray:
         """O(drifted) refresh set (int64 ids).  Accepts an ``[N, C]`` array
         or anything indexable by client id (dict registry compat)."""
         fresh = fresh_label_dists
         if not isinstance(fresh, np.ndarray) or fresh.ndim != 2:
             fresh = np.asarray([fresh_label_dists[c]
                                 for c in range(self.num_clients)])
-        return np.flatnonzero(self.stale_mask(round_idx, fresh))
+        return np.flatnonzero(self.stale_mask(round_idx, fresh,
+                                              active=active))
 
     def needs_refresh(self, client: int, round_idx: int,
                       fresh_label_dist: np.ndarray) -> bool:
@@ -107,10 +115,43 @@ class StreamingSummaryRegistry:
                label_dist: np.ndarray) -> None:
         self.update_batch([client], round_idx, summary[None], label_dist[None])
 
+    def remove(self, client: int) -> None:
+        """Evict a departed client (scenario churn).  Without this, the
+        dense row of a client that left the fleet keeps matching the drift
+        scan as "fresh" and keeps feeding its stale summary to clustering —
+        the stale-row selection bug ``tests/test_stream.py`` pins."""
+        self.has_summary[client] = False
+        self.last_refresh[client] = -(10 ** 9)
+        if self.summaries is not None:
+            self.summaries[client] = 0.0
+        if self.label_dists is not None:
+            self.label_dists[client] = 0.0
+
     # ------------------------------------------------------------------
+
+    def has_mask(self) -> np.ndarray:
+        """[N] bool: which clients currently hold a summary."""
+        return self.has_summary.copy()
 
     def matrix(self) -> np.ndarray:
         """The clustering input [N, D] — the live array, no re-stacking."""
         assert self.summaries is not None and self.has_summary.all(), \
             "missing summaries"
+        return self.summaries
+
+    def matrix_rows(self, ids: np.ndarray) -> np.ndarray:
+        """Clustering input restricted to ``ids`` — churn-safe.  Asserts
+        every requested row holds a summary (same contract as the dict
+        baseline: misuse must fail loudly, not cluster zero rows)."""
+        ids = np.asarray(ids, np.int64)
+        if self.summaries is None or ids.size == 0:
+            return np.zeros((0, 0), np.float32)
+        assert self.has_summary[ids].all(), \
+            "missing summaries in requested rows"
+        return self.summaries[ids]
+
+    def dense(self) -> np.ndarray:
+        """Full [N, D] matrix, zero rows for missing clients (stable row
+        indexing for online cluster maintenance under churn)."""
+        assert self.summaries is not None, "no summaries yet"
         return self.summaries

@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis_compat import given, settings, st
 
 from repro.core import RefreshPolicy, SummaryRegistry, kmeans
 from repro.kernels import ops, ref
@@ -22,6 +23,7 @@ from repro.stream import (
     cm_label_dist,
     cm_merge,
     cm_update_batch,
+    rp_update_batch,
 )
 
 SPEC = SketchSpec(num_rows=3, width=64)
@@ -119,6 +121,59 @@ def test_fleet_sketches_duplicate_ids_accumulate(rs):
 
 
 # ---------------------------------------------------------------------------
+# sketch algebra — property tests (skip gracefully without hypothesis)
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 60))
+def test_cm_merge_commutative_and_associative(seed, n):
+    """merge is plain addition over non-negative integer-valued counters,
+    so it must commute and associate *exactly* (no float reordering)."""
+    rs = np.random.RandomState(seed)
+    labels = rs.randint(0, 25, (3, n)).astype(np.int32)
+    valid = rs.rand(3, n) > 0.2
+    a, b, c = cm_update_batch(labels, valid, SPEC)
+    np.testing.assert_array_equal(cm_merge(a, b), cm_merge(b, a))
+    np.testing.assert_array_equal(cm_merge(cm_merge(a, b), c),
+                                  cm_merge(a, cm_merge(b, c)))
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 50), st.integers(2, 4))
+def test_cm_update_concat_equals_merged_shards(seed, n, shards):
+    """update on a concatenated batch == merge of per-shard updates — the
+    linearity the streaming registry leans on for shard/merge topologies."""
+    rs = np.random.RandomState(seed)
+    labels = rs.randint(0, 30, n).astype(np.int32)
+    valid = rs.rand(n) > 0.15
+    whole = cm_update_batch(labels[None], valid[None], SPEC)[0]
+    cuts = np.linspace(0, n, shards + 1).astype(int)
+    merged = np.zeros_like(whole)
+    for lo, hi in zip(cuts[:-1], cuts[1:]):
+        if hi > lo:
+            merged = cm_merge(
+                merged, cm_update_batch(labels[None, lo:hi],
+                                        valid[None, lo:hi], SPEC)[0])
+    np.testing.assert_array_equal(merged, whole)
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 40))
+def test_rp_update_concat_equals_merged_shards(seed, n):
+    """The random-projection feature sketch is linear too: sketch of a
+    concatenated stream == sum of shard sketches (float tolerance — the
+    projection reduction order differs between the two groupings)."""
+    rs = np.random.RandomState(seed)
+    feats = rs.randn(1, n, 12).astype(np.float32)
+    valid = rs.rand(1, n) > 0.2
+    whole = rp_update_batch(feats, valid, SPEC)[0]
+    cut = n // 2
+    merged = (rp_update_batch(feats[:, :cut], valid[:, :cut], SPEC)[0]
+              + rp_update_batch(feats[:, cut:], valid[:, cut:], SPEC)[0])
+    np.testing.assert_allclose(merged, whole, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
 # streaming registry == baseline registry, round for round
 
 
@@ -155,6 +210,63 @@ def test_streaming_registry_accepts_dict_signal(rs):
     assert not stream.needs_refresh(2, 1, fresh[2])
     with pytest.raises(AssertionError):
         stream.matrix()                                  # missing summaries
+
+
+def test_streaming_remove_evicts_stale_row(rs):
+    """Regression (churn): without ``remove``, a departed client's dense
+    row keeps matching the drift scan as fresh and keeps feeding its stale
+    summary to clustering — it could still be clustered and selected."""
+    n, c = 8, 5
+    policy = RefreshPolicy(max_age_rounds=100, kl_threshold=0.05)
+    reg = StreamingSummaryRegistry(n, policy)
+    fresh = rs.dirichlet([0.5] * c, n).astype(np.float32)
+    summaries = rs.rand(n, 6).astype(np.float32) + 1.0    # no zero rows
+    reg.update_batch(list(range(n)), 0, summaries, fresh)
+
+    # the bug: after client 3 departs, its row still looks fresh and its
+    # stale summary still sits in the clustering input
+    assert not reg.needs_refresh(3, 1, fresh[3])
+    assert np.any(reg.dense()[3] != 0)
+
+    reg.remove(3)
+    assert not reg.has_mask()[3]
+    assert reg.needs_refresh(3, 1, fresh[3])              # rejoin => stale
+    assert np.all(reg.dense()[3] == 0)                    # row evicted
+    with pytest.raises(AssertionError):
+        reg.matrix()                                      # fleet incomplete
+
+    # while absent, the active mask keeps it out of the refresh set...
+    active = np.ones(n, bool)
+    active[3] = False
+    assert not reg.stale_mask(1, fresh, active=active)[3]
+    # ...and clustering over live rows no longer sees it
+    have = np.flatnonzero(reg.has_mask() & active)
+    assert 3 not in have
+    assert reg.matrix_rows(have).shape == (n - 1, 6)
+    # on rejoin it is immediately stale again
+    active[3] = True
+    assert reg.stale_mask(1, fresh, active=active)[3]
+
+
+def test_dict_registry_remove_matches_streaming(rs):
+    """The baseline registry supports the same eviction path (differential
+    harness parity under churn)."""
+    n, c = 6, 4
+    policy = RefreshPolicy(max_age_rounds=100, kl_threshold=0.05)
+    base = SummaryRegistry(n, policy)
+    stream = StreamingSummaryRegistry(n, policy)
+    fresh = rs.dirichlet([0.5] * c, n).astype(np.float32)
+    for cl in range(n):
+        s = rs.rand(5).astype(np.float32)
+        base.update(cl, 0, s, fresh[cl])
+        stream.update(cl, 0, s, fresh[cl])
+    base.remove(2)
+    stream.remove(2)
+    np.testing.assert_array_equal(base.has_mask(), stream.has_mask())
+    np.testing.assert_array_equal(base.last_refresh, stream.last_refresh)
+    np.testing.assert_array_equal(base.stale_mask(1, fresh),
+                                  stream.stale_mask(1, fresh))
+    np.testing.assert_array_equal(base.dense(), stream.dense())
 
 
 # ---------------------------------------------------------------------------
