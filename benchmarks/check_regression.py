@@ -1,0 +1,93 @@
+"""CI perf-regression gate: quick-mode bench medians vs a committed
+baseline.
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        BENCH.json BENCH_baseline.json --tolerance 2.5
+
+For each gated record group (the segment of the CSV name before the first
+``/`` — ``summary``, ``clustering``, ``sharded`` by default) the gate
+compares the *median* ``us_per_call`` of the current run against the
+committed ``BENCH_baseline.json`` and fails when the ratio exceeds the
+tolerance band.  Medians over a whole group are robust to one noisy
+record; the wide default band (2.5x) absorbs runner-hardware variance
+while still catching the order-of-magnitude rots (an accidentally
+de-jitted hot path, a re-introduced per-client loop) that would silently
+invalidate the speedups CHANGES.md claims.
+
+A group that exists in the baseline but is missing (or empty) in the
+current run also fails — losing a bench is itself a regression.  Large
+*improvements* are reported as a hint to refresh the baseline
+(regenerate with ``python -m benchmarks.run --json BENCH_baseline.json``
+and commit it alongside the PR that earns it).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import sys
+
+DEFAULT_GROUPS = ("summary", "clustering", "sharded")
+
+
+def group_medians(report: dict, groups: tuple[str, ...]) -> dict[str, float]:
+    """Median us_per_call per record-name group.  Records with
+    ``us_per_call == 0`` are derived-only rows (speedup ratios, flags) —
+    they carry no latency and are excluded."""
+    samples: dict[str, list[float]] = {g: [] for g in groups}
+    for bench in report.get("benches", {}).values():
+        for rec in bench.get("records", []):
+            g = rec["name"].split("/", 1)[0]
+            if g in samples and rec["us_per_call"] > 0:
+                samples[g].append(rec["us_per_call"])
+    return {g: statistics.median(v) for g, v in samples.items() if v}
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("current", help="BENCH JSON of this run")
+    p.add_argument("baseline", help="committed BENCH_baseline.json")
+    p.add_argument("--tolerance", type=float, default=2.5,
+                   help="fail when current/baseline exceeds this ratio")
+    p.add_argument("--groups", default=",".join(DEFAULT_GROUPS),
+                   help="comma-separated record-name groups to gate")
+    args = p.parse_args(argv)
+    groups = tuple(filter(None, args.groups.split(",")))
+
+    with open(args.current) as f:
+        current = group_medians(json.load(f), groups)
+    with open(args.baseline) as f:
+        baseline = group_medians(json.load(f), groups)
+
+    failures = []
+    for g in groups:
+        if g not in baseline:
+            print(f"{g:12s} no baseline records — skipped (regenerate the "
+                  f"baseline to start gating it)")
+            continue
+        if g not in current:
+            failures.append(f"{g}: present in baseline but missing from "
+                            f"the current run")
+            continue
+        ratio = current[g] / baseline[g]
+        verdict = "OK"
+        if ratio > args.tolerance:
+            verdict = "REGRESSED"
+            failures.append(f"{g}: median {current[g]:.0f}us vs baseline "
+                            f"{baseline[g]:.0f}us ({ratio:.2f}x > "
+                            f"{args.tolerance}x)")
+        elif ratio < 1.0 / args.tolerance:
+            verdict = "improved — consider refreshing the baseline"
+        print(f"{g:12s} median {current[g]:12.0f}us  baseline "
+              f"{baseline[g]:12.0f}us  ratio {ratio:5.2f}x  {verdict}")
+
+    if failures:
+        print("\nPERF REGRESSION GATE FAILED:", file=sys.stderr)
+        for f_ in failures:
+            print(f"  - {f_}", file=sys.stderr)
+        sys.exit(1)
+    print("perf gate passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,11 +8,13 @@ Prints ``name,us_per_call,derived`` CSV lines:
                         (+ online maintenance vs full recluster, §5)
   * bench_selection   — paper §2 / HACCS: time-to-accuracy of selection
   * bench_kernels     — Pallas kernel hot spots vs oracles
+  * bench_shard       — §7 sharded pipeline at 100k–1M clients
   * bench_dryrun      — §Roofline table from dry-run artifacts (if present)
 
-and mirrors every CSV record into a machine-readable ``BENCH_pr2.json``
+and mirrors every CSV record into a machine-readable ``BENCH.json``
 (``--json PATH`` to relocate, ``--no-json`` to disable) so the perf
-trajectory is tracked across PRs.
+trajectory is tracked across PRs — and gated against the committed
+``BENCH_baseline.json`` by ``benchmarks.check_regression`` in CI.
 
 Default sizes are CPU-budget-friendly; --full uses paper-scale settings.
 """
@@ -32,6 +34,7 @@ from benchmarks import (
     bench_dryrun,
     bench_kernels,
     bench_selection,
+    bench_shard,
     bench_summary,
     bench_summary_pipeline,
 )
@@ -42,6 +45,7 @@ BENCHES = (
     ("selection", bench_selection.main),
     ("kernels", bench_kernels.main),
     ("pipeline", bench_summary_pipeline.main),
+    ("shard", bench_shard.main),
     ("compression", bench_compression.main),
     ("dryrun", bench_dryrun.main),
 )
@@ -89,7 +93,7 @@ def main(argv=None) -> None:
                    help="paper-scale sizes (slow)")
     p.add_argument("--only", default="",
                    help="comma-separated bench names to run")
-    p.add_argument("--json", default="BENCH_pr2.json",
+    p.add_argument("--json", default="BENCH.json",
                    help="machine-readable output path")
     p.add_argument("--no-json", action="store_true",
                    help="skip writing the JSON mirror")
@@ -100,9 +104,10 @@ def main(argv=None) -> None:
 
     print("name,us_per_call,derived")
     failures = []
-    # schema 2: adds scenario_presets + scenario/<preset>/<reg>-<clus>
-    # records inside the selection bench (validated by CI)
-    report: dict = {"schema": 2, "full": bool(args.full),
+    # schema 3: adds the shard bench — sharded/* records with n_shards /
+    # scan_s / merge_s derived fields (validated by CI, incl. a forced
+    # 4-device host) — on top of schema 2's scenario sweep records
+    report: dict = {"schema": 3, "full": bool(args.full),
                     "scenario_presets": list(PRESET_NAMES), "benches": {}}
     for name, fn in BENCHES:
         if only and name not in only:

@@ -15,6 +15,7 @@ from repro.core.kmeans import (  # noqa: F401
     kmeans,
     minibatch_kmeans,
     pairwise_sq_dist,
+    weighted_kmeans,
 )
 from repro.core.scheduler import (  # noqa: F401
     RefreshPolicy,

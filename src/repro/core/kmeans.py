@@ -86,6 +86,78 @@ def kmeans(x, k: int, key, max_iters: int = 50, tol: float = 1e-6,
     return KMeansResult(cents, assign, inertia, iters)
 
 
+def _weighted_kmeanspp_init(x, w, k: int, key, use_kernel=False):
+    """kmeans++ seeding over weighted points: next centroid ∝ w·D²(x).
+
+    Zero-weight points are never seeded (they represent empty shard-local
+    clusters in the hierarchical merge); if every D² is zero the draw falls
+    back to ∝ w, and to uniform only when all weights are zero too.
+    """
+    n, d = x.shape
+    w_total = jnp.sum(w)
+    w_probs = jnp.where(w_total > 0, w / jnp.maximum(w_total, 1e-12),
+                        jnp.full((n,), 1.0 / n, x.dtype))
+
+    def body(i, carry):
+        cents, key = carry
+        key, sub = jax.random.split(key)
+        dists = pairwise_sq_dist(x, cents, use_kernel)        # [N, k]
+        active = jnp.arange(k) < i
+        dmin = jnp.min(jnp.where(active[None, :], dists, jnp.inf), axis=1)
+        dmin = jnp.where(jnp.isfinite(dmin), dmin, 0.0) * w
+        total = jnp.sum(dmin)
+        probs = jnp.where(total > 0, dmin / jnp.maximum(total, 1e-12),
+                          w_probs)
+        idx = jax.random.choice(sub, n, p=probs)
+        return cents.at[i].set(x[idx]), key
+
+    key, sub = jax.random.split(key)
+    first = x[jax.random.choice(sub, n, p=w_probs)]
+    cents0 = jnp.zeros((k, d), x.dtype).at[0].set(first)
+    cents, _ = jax.lax.fori_loop(1, k, body, (cents0, key))
+    return cents
+
+
+@functools.partial(jax.jit, static_argnames=("k", "max_iters", "use_kernel"))
+def weighted_kmeans(x, w, k: int, key, max_iters: int = 50, tol: float = 1e-6,
+                    use_kernel: bool = False) -> KMeansResult:
+    """Weighted K-means: minimize J = Σ_i w_i · min_j ||x_i - c_j||².
+
+    The global-merge step of the hierarchical pipeline (DESIGN.md §7):
+    ``x`` are shard-local centroids, ``w`` their live member counts, so
+    centroid updates are count-weighted means — exactly the update full
+    Lloyd would make if every member sat at its local centroid.
+    Zero-weight rows still receive an assignment but pull no centroid and
+    contribute no inertia.
+    """
+    n, _d = x.shape
+    w = w.astype(x.dtype)
+    cents = _weighted_kmeanspp_init(x, w, k, key, use_kernel)
+
+    def cond(state):
+        _, _, delta, it = state
+        return (delta > tol) & (it < max_iters)
+
+    def step(state):
+        cents, _, _, it = state
+        dists = pairwise_sq_dist(x, cents, use_kernel)
+        assign = jnp.argmin(dists, axis=1).astype(jnp.int32)
+        oh = jax.nn.one_hot(assign, k, dtype=x.dtype) * w[:, None]  # [N, K]
+        sums = oh.T @ x
+        counts = jnp.sum(oh, axis=0)
+        new = jnp.where(counts[:, None] > 0,
+                        sums / jnp.maximum(counts, 1e-12)[:, None], cents)
+        delta = jnp.max(jnp.sum(jnp.square(new - cents), axis=-1))
+        return new, assign, delta, it + 1
+
+    state = (cents, jnp.zeros(n, jnp.int32), jnp.inf, jnp.int32(0))
+    cents, assign, _, iters = jax.lax.while_loop(cond, step, state)
+    dists = pairwise_sq_dist(x, cents, use_kernel)
+    assign = jnp.argmin(dists, axis=1).astype(jnp.int32)
+    inertia = jnp.sum(w * jnp.min(dists, axis=1))
+    return KMeansResult(cents, assign, inertia, iters)
+
+
 @functools.partial(jax.jit, static_argnames=("k", "batch_size", "iters",
                                              "use_kernel"))
 def minibatch_kmeans(x, k: int, key, batch_size: int = 256, iters: int = 64,

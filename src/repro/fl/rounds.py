@@ -39,6 +39,7 @@ from repro.core import (
     BatchedSummaryEngine, RefreshPolicy, SelectionConfig, SummaryRegistry,
     dbscan, kmeans, minibatch_kmeans, select_devices, sym_kl,
 )
+from repro.shard import HierarchicalClusterMaintainer, ShardedSummaryRegistry
 from repro.stream import (
     OnlineClusterMaintainer, OnlinePolicy, StreamingSummaryRegistry,
 )
@@ -68,11 +69,19 @@ class FLConfig:
                                      # perclient (legacy per-client jit loop)
     registry: str = "dict"           # dict (baseline SummaryRegistry) |
                                      # streaming (dense [N,·] matrices,
-                                     # batched drift scan, DESIGN.md §5)
+                                     # batched drift scan, DESIGN.md §5) |
+                                     # sharded (chunked drift scan over a
+                                     # fleet device mesh, DESIGN.md §7)
     clustering: str = "kmeans"       # kmeans | minibatch | dbscan |
-                                     # online (assign-only maintenance)
+                                     # online (assign-only maintenance) |
+                                     # hierarchical (shard-local online
+                                     # + weighted global merge, §7)
     online_inertia_ratio: float = 1.5   # online: full-refit trigger
     online_reseed_every: int = 8        # online: split/merge cadence
+    # --- sharded fleet pipeline (DESIGN.md §7) ---
+    n_shards: int = 0                # 0 = one shard per local device
+    shard_chunk_rows: int = 131072   # scan chunk (caps device memory)
+    hier_local_k: int = 0            # per-shard centroids (0 = num_clusters)
     num_clusters: int = 8
     coreset_k: int = 64
     encoder_dim: int = 32
@@ -200,16 +209,27 @@ def run_federated(data: FederatedDataset, cfg: FLConfig,
     if cfg.registry == "streaming":
         registry = StreamingSummaryRegistry(
             spec.num_clients, policy, num_classes=spec.num_classes)
+    elif cfg.registry == "sharded":
+        registry = ShardedSummaryRegistry(
+            spec.num_clients, policy, num_classes=spec.num_classes,
+            n_shards=cfg.n_shards or None,
+            chunk_rows=cfg.shard_chunk_rows)
     elif cfg.registry == "dict":
         registry = SummaryRegistry(spec.num_clients, policy)
     else:
         raise ValueError(f"unknown registry: {cfg.registry}")
+    if cfg.clustering not in ("kmeans", "minibatch", "dbscan", "online",
+                              "hierarchical"):
+        raise ValueError(f"unknown clustering: {cfg.clustering}")
     maintainer = None
+    online_policy = OnlinePolicy(inertia_ratio=cfg.online_inertia_ratio,
+                                 reseed_every=cfg.online_reseed_every)
     if cfg.clustering == "online":
-        maintainer = OnlineClusterMaintainer(
-            cfg.num_clusters,
-            OnlinePolicy(inertia_ratio=cfg.online_inertia_ratio,
-                         reseed_every=cfg.online_reseed_every))
+        maintainer = OnlineClusterMaintainer(cfg.num_clusters, online_policy)
+    elif cfg.clustering == "hierarchical":
+        maintainer = HierarchicalClusterMaintainer(
+            cfg.num_clusters, n_shards=cfg.n_shards or None,
+            local_k=cfg.hier_local_k or None, policy=online_policy)
     sel_cfg = SelectionConfig(cfg.clients_per_round, cfg.selection)
 
     test_x, test_y = data.test_set()
@@ -397,4 +417,6 @@ def run_federated(data: FederatedDataset, cfg: FLConfig,
     if maintainer is not None:
         history["online_cluster"] = {"full_fits": maintainer.full_fits,
                                      "reseeds": maintainer.reseeds}
+        if isinstance(maintainer, HierarchicalClusterMaintainer):
+            history["online_cluster"]["merges"] = maintainer.merges
     return history

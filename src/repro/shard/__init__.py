@@ -1,0 +1,10 @@
+"""Sharded fleet pipeline (DESIGN.md §7).
+
+Partitions the summary→drift-scan→clustering server round across a JAX
+device mesh: a row-sharded, chunk-scanned summary registry
+(``registry.py``) and hierarchical two-level clustering
+(``hierarchy.py``), wired into the round loop behind
+``FLConfig(registry="sharded", clustering="hierarchical")``.
+"""
+from repro.shard.hierarchy import HierarchicalClusterMaintainer  # noqa: F401
+from repro.shard.registry import ShardedSummaryRegistry  # noqa: F401

@@ -1,0 +1,121 @@
+"""Hierarchical two-level clustering (DESIGN.md §7).
+
+Even the online maintainer's escalation path — a full K-means refit over
+all N rows — is a single-device O(N·K·D·iters) scan.  At fleet scale the
+standard fix is cluster-of-clusters: partition the rows, keep a *local*
+clustering per shard, and cluster the shard-local centroids globally.
+
+  * **shard-local level** — the fleet's ``[N, D]`` summary matrix is
+    split into S contiguous row slices; each slice is maintained by its
+    own ``OnlineClusterMaintainer`` (assign-only updates, running
+    inertia, split/merge re-seeding, local full-refit fallback), so
+    per-round local work stays O(drifted) and full refits touch N/S rows;
+  * **global merge** — the S·k_local live centroids, weighted by their
+    live member counts, are clustered into K global clusters with
+    ``core.weighted_kmeans``.  Weighted Lloyd over (centroid, count)
+    pairs makes exactly the update full Lloyd would make if every member
+    sat at its local centroid, so the merged objective upper-bounds the
+    true global J by the (frozen) within-local-cluster scatter;
+  * **composition** — a client's global assignment is the global cluster
+    of its shard-local centroid: ``assignment[i] = g[local(i)]``.  No
+    O(N·K) global distance pass is ever taken; the merge costs
+    O(S·k_local·K·D) — independent of N.
+
+Exposed to the round loop as ``FLConfig(clustering="hierarchical")``.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core.kmeans import weighted_kmeans
+from repro.stream.cluster import OnlineClusterMaintainer, OnlinePolicy
+
+
+class HierarchicalClusterMaintainer:
+    """Two-level cluster-of-clusters over a row-partitioned fleet.
+
+    Drop-in for ``OnlineClusterMaintainer`` in the round loop: same
+    ``refresh(x, drifted_ids, key, live=)`` entry point and
+    ``centroids`` / ``assignment`` / ``full_fits`` / ``reseeds`` surface,
+    plus ``merges`` / ``last_merge_inertia`` for the global level.
+    """
+
+    def __init__(self, k: int, n_shards: int | None = None,
+                 local_k: int | None = None,
+                 policy: OnlinePolicy | None = None):
+        self.k = k
+        self.n_shards = (n_shards if n_shards
+                         else len(jax.devices()))
+        self.local_k = local_k or k
+        self.policy = policy or OnlinePolicy()
+        self.shards = [OnlineClusterMaintainer(self.local_k, self.policy)
+                       for _ in range(self.n_shards)]
+        self.centroids: np.ndarray | None = None   # [K, D] global
+        self.assignment: np.ndarray | None = None  # [N] global clusters
+        self.merges = 0
+        self.last_merge_inertia = np.inf
+
+    # ------------------------------------------------------------------
+
+    @property
+    def full_fits(self) -> int:
+        return sum(s.full_fits for s in self.shards)
+
+    @property
+    def reseeds(self) -> int:
+        return sum(s.reseeds for s in self.shards)
+
+    def _bounds(self) -> list[tuple[int, int]]:
+        """Contiguous row slices, one per shard (trailing shards may be
+        empty when S > N)."""
+        per = -(-self._n // self.n_shards)
+        return [(s * per, min((s + 1) * per, self._n))
+                for s in range(self.n_shards)]
+
+    # ------------------------------------------------------------------
+
+    def refresh(self, x: np.ndarray, drifted_ids, key, live=None) -> dict:
+        """Absorb one round: shard-local maintenance over the drifted rows
+        of each slice, then the weighted global merge.  ``x`` is the full
+        [N, D] fleet matrix (zero rows for absent clients), ``live`` the
+        real-client mask — both sliced per shard, no copies (contiguous
+        views)."""
+        self._n = n = x.shape[0]
+        live = (np.ones(n, bool) if live is None
+                else np.asarray(live, bool))
+        drifted = np.asarray(drifted_ids, np.int64)
+
+        cents, weights = [], []
+        offsets = np.zeros(self.n_shards, np.int64)
+        local = np.zeros(n, np.int64)   # row -> index into stacked cents
+        for s, (lo, hi) in enumerate(self._bounds()):
+            offsets[s] = len(cents) * self.local_k
+            if hi <= lo or not live[lo:hi].any():
+                continue           # empty / fully-departed slice: no
+                                   # centroids to contribute, rows stay dead
+            m = self.shards[s]
+            rel = drifted[(drifted >= lo) & (drifted < hi)] - lo
+            m.refresh(x[lo:hi], rel, jax.random.fold_in(key, s),
+                      live=live[lo:hi])
+            local[lo:hi] = offsets[s] + m.assignment
+            counts = np.bincount(m.assignment[live[lo:hi]],
+                                 minlength=self.local_k)
+            cents.append(np.asarray(m.centroids, np.float32))
+            weights.append(counts)
+
+        if not cents:
+            return {"mode": "hierarchical", "inertia": np.inf}
+        res = weighted_kmeans(
+            np.concatenate(cents),
+            np.concatenate(weights).astype(np.float32),
+            self.k, jax.random.fold_in(key, self.n_shards + 1),
+            max_iters=self.policy.max_iters,
+            use_kernel=self.policy.use_kernel)
+        g = np.asarray(res.assignment, np.int64)   # local centroid -> global
+        self.centroids = np.asarray(res.centroids)
+        self.assignment = g[local]
+        self.merges += 1
+        self.last_merge_inertia = float(res.inertia)
+        return {"mode": "hierarchical", "inertia": self.last_merge_inertia,
+                "n_shards": self.n_shards}

@@ -2,6 +2,11 @@
 replayable heterogeneity scenarios (availability, churn, deadlines, label
 drift), and named presets swept by benchmarks and the differential test
 harness."""
+from repro.sim.fleet import (  # noqa: F401
+    FleetArenas,
+    drift_fleet,
+    synthetic_fleet,
+)
 from repro.sim.presets import (  # noqa: F401
     DATA_HINTS,
     PRESET_NAMES,

@@ -56,12 +56,17 @@ class StreamingSummaryRegistry:
         if self.label_dists is None:
             mask = missing | aged
         else:
-            drift = batch_sym_kl(self.label_dists,
-                                 np.asarray(fresh_label_dists, np.float32))
+            drift = self._drift(np.asarray(fresh_label_dists, np.float32))
             mask = missing | aged | (drift > self.policy.kl_threshold)
         if active is not None:
             mask = mask & np.asarray(active, bool)
         return mask
+
+    def _drift(self, fresh: np.ndarray) -> np.ndarray:
+        """[N, C] fresh P(y) -> [N] sym-KL against the stored dists — the
+        scan hook the sharded registry overrides with a device-mesh scan
+        (repro.shard.ShardedSummaryRegistry)."""
+        return batch_sym_kl(self.label_dists, fresh)
 
     def stale_clients(self, round_idx: int, fresh_label_dists,
                       active: np.ndarray | None = None) -> np.ndarray:

@@ -17,6 +17,7 @@ import dataclasses
 from typing import Mapping, Sequence
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # Logical axis -> tuple of mesh axes (tried in order, first fit wins).
@@ -47,6 +48,23 @@ DEFAULT_RULES: dict[str, tuple[str, ...]] = {
     "clients": ("pod", "data"),         # FL-layer: client axis shards like batch
     "centroids": (),
 }
+
+
+# The server-side fleet pipeline (src/repro/shard/) partitions client-row
+# arenas over a dedicated 1-D `fleet` mesh axis instead of the model axes.
+FLEET_RULES: dict[str, tuple[str, ...]] = {"clients": ("fleet",)}
+
+
+def fleet_mesh(n_devices: int | None = None) -> Mesh:
+    """1-D mesh over the local devices with a single ``fleet`` axis.
+
+    ``n_devices`` is clamped to what the host actually has, so configs
+    written for a 4-device CI host degrade to a 1-device mesh (and thus to
+    the streaming baseline's semantics) on a laptop instead of failing.
+    """
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else max(1, min(n_devices, len(devs)))
+    return Mesh(np.asarray(devs[:n]), ("fleet",))
 
 
 def _mesh_axis_sizes(mesh: Mesh) -> dict[str, int]:

@@ -18,6 +18,7 @@ from repro.core import BatchedSummaryEngine, RefreshPolicy, SummaryRegistry
 from repro.data.synthetic import FederatedDataset, small_spec
 from repro.fl import FLConfig, run_federated
 from repro.fl.client import timed_summary
+from repro.shard import ShardedSummaryRegistry
 from repro.sim import Scenario, make_scenario
 from repro.stream import StreamingSummaryRegistry
 
@@ -64,6 +65,46 @@ def test_streaming_decisions_match_dict_under_churn(seed):
         if have.size:
             np.testing.assert_array_equal(stream.matrix_rows(have),
                                           base.matrix_rows(have))
+
+
+# ---------------------------------------------------------------------------
+# sharded registry ≡ streaming baseline, under churn (DESIGN.md §7) — on
+# whatever mesh the host exposes (1 device here; CI re-runs the shard
+# tests on a forced 4-device host)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_sharded_decisions_match_streaming_under_churn(seed):
+    n, c, rounds = 30, 6, 10
+    rs = np.random.RandomState(seed)
+    policy = RefreshPolicy(max_age_rounds=4, kl_threshold=0.08)
+    stream = StreamingSummaryRegistry(n, policy)
+    # chunk_rows=8: the fleet spans multiple chunks + a zero-padded tail,
+    # so the differential covers the chunked-scan path, not just 1 chunk
+    shard = ShardedSummaryRegistry(n, policy, chunk_rows=8)
+    scenario = make_scenario("mobile-churn", n, seed=seed)
+    for rnd in range(rounds):
+        plan = scenario.round_plan(rnd)
+        for cl in plan.departed:
+            stream.remove(int(cl))
+            shard.remove(int(cl))
+        fresh = rs.dirichlet([0.4] * c, n).astype(np.float32)
+        want = stream.stale_clients(rnd, fresh, active=plan.active)
+        got = shard.stale_clients(rnd, fresh, active=plan.active)
+        np.testing.assert_array_equal(got, want)
+        todo = [int(cl) for cl in got if rs.rand() > 0.25]
+        if todo:
+            summaries = rs.rand(len(todo), 8).astype(np.float32)
+            stream.update_batch(todo, rnd, summaries, fresh[todo])
+            shard.update_batch(todo, rnd, summaries, fresh[todo])
+        assert shard.refresh_count == stream.refresh_count
+        np.testing.assert_array_equal(shard.has_mask(), stream.has_mask())
+        np.testing.assert_array_equal(shard.last_refresh,
+                                      stream.last_refresh)
+        have = np.flatnonzero(shard.has_mask())
+        if have.size:
+            np.testing.assert_array_equal(shard.matrix_rows(have),
+                                          stream.matrix_rows(have))
 
 
 # ---------------------------------------------------------------------------
@@ -162,3 +203,18 @@ def test_batched_engine_e2e_equals_perclient_under_churn(churn_setup):
     h_per = run_federated(data, _churn_cfg(summary_engine="perclient"),
                           scenario=Scenario.from_config(sc_config))
     assert _trace(h_batched) == _trace(h_per)
+
+
+@pytest.mark.slow
+def test_sharded_registry_e2e_equals_streaming_under_churn(churn_setup):
+    """Identical refresh decisions + identical clustering input rows ⇒
+    the whole round trace (selection, clock, accuracy) must match when
+    only the registry implementation is swapped."""
+    data, sc_config = churn_setup
+    h_stream = run_federated(data, _churn_cfg(registry="streaming"),
+                             scenario=Scenario.from_config(sc_config))
+    h_shard = run_federated(data,
+                            _churn_cfg(registry="sharded",
+                                       shard_chunk_rows=8),
+                            scenario=Scenario.from_config(sc_config))
+    assert _trace(h_stream) == _trace(h_shard)

@@ -6,7 +6,14 @@ from hypothesis_compat import given, settings, st
 import jax
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.utils.sharding import DEFAULT_RULES, make_spec
+from repro.utils.sharding import (
+    DEFAULT_RULES,
+    FLEET_RULES,
+    ShardingRules,
+    fleet_mesh,
+    make_spec,
+    tree_shardings,
+)
 
 
 @pytest.fixture(scope="module")
@@ -64,6 +71,64 @@ def test_no_mesh_axis_reused():
         elif s is not None:
             flat.append(s)
     assert len(flat) == len(set(flat))
+
+
+def test_rule_overrides_and_fleet_rules():
+    """Per-call rules merge over the defaults: the fleet layer points the
+    ``clients`` axis at the dedicated 1-D ``fleet`` mesh instead of the
+    model axes."""
+    mesh = FakeMesh((4,), ("fleet",))
+    spec = make_spec(("clients", None), (128, 10), mesh, rules=FLEET_RULES)
+    assert spec[0] == "fleet"
+    # default rules know nothing about a fleet axis -> replicate
+    assert make_spec(("clients", None), (128, 10), mesh)[0] is None
+    # non-divisible client count degrades to replication, not an error
+    assert make_spec(("clients", None), (127, 10), mesh,
+                     rules=FLEET_RULES)[0] is None
+
+
+def test_make_spec_rank_mismatch_raises():
+    mesh = FakeMesh((4, 4), ("data", "model"))
+    with pytest.raises(AssertionError):
+        make_spec(("batch", "embed"), (128,), mesh)
+
+
+def test_sharding_rules_bundle_merges_over_defaults():
+    rules = ShardingRules("fleet-test", {"clients": ("fleet",)})
+    merged = rules.merged()
+    assert merged["clients"] == ("fleet",)
+    assert merged["embed"] == DEFAULT_RULES["embed"]
+    assert DEFAULT_RULES["clients"] == ("pod", "data")   # defaults intact
+
+
+def test_tree_shardings_nested_tree(mesh1):
+    """Parallel pytrees of logical-axes tuples and shapes resolve to
+    NamedShardings leaf-for-leaf, through nested dict/list structure."""
+    spec_tree = {"w": ("embed", "mlp"), "moe": [("experts", "embed", "mlp")],
+                 "scalar": (None,)}
+    shape_tree = {"w": np.zeros((8, 4)), "moe": [np.zeros((2, 8, 4))],
+                  "scalar": np.zeros((3,))}
+    out = tree_shardings(spec_tree, shape_tree, mesh1)
+    assert set(out) == {"w", "moe", "scalar"}
+    for leaf in (out["w"], out["moe"][0], out["scalar"]):
+        assert leaf.mesh is mesh1
+    # a 1x1 mesh still resolves axes (every dim divides 1)
+    assert out["w"].spec == P("data", "model")
+    assert out["scalar"].spec == P(None)
+
+
+def test_tree_shardings_structure_mismatch_raises(mesh1):
+    with pytest.raises((ValueError, KeyError)):
+        tree_shardings({"w": ("embed",)}, {"b": np.zeros((4,))}, mesh1)
+
+
+def test_fleet_mesh_axis_and_clamp():
+    mesh = fleet_mesh()
+    assert mesh.axis_names == ("fleet",)
+    assert mesh.devices.size == len(jax.devices())
+    assert fleet_mesh(9999).devices.size == len(jax.devices())
+    assert fleet_mesh(1).devices.size == 1
+    assert fleet_mesh(0).devices.size == 1   # clamped up, never empty
 
 
 @settings(deadline=None, max_examples=50)
