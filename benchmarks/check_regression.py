@@ -5,7 +5,8 @@ baseline.
         BENCH.json BENCH_baseline.json --tolerance 2.5
 
 For each gated record group (the segment of the CSV name before the first
-``/`` — ``summary``, ``clustering``, ``sharded`` by default) the gate
+``/`` — ``summary``, ``clustering``, ``sharded``, ``server`` by default)
+the gate
 compares the *median* ``us_per_call`` of the current run against the
 committed ``BENCH_baseline.json`` and fails when the ratio exceeds the
 tolerance band.  Medians over a whole group are robust to one noisy
@@ -27,7 +28,7 @@ import json
 import statistics
 import sys
 
-DEFAULT_GROUPS = ("summary", "clustering", "sharded")
+DEFAULT_GROUPS = ("summary", "clustering", "sharded", "server")
 
 
 def group_medians(report: dict, groups: tuple[str, ...]) -> dict[str, float]:

@@ -9,6 +9,8 @@ Prints ``name,us_per_call,derived`` CSV lines:
   * bench_selection   — paper §2 / HACCS: time-to-accuracy of selection
   * bench_kernels     — Pallas kernel hot spots vs oracles
   * bench_shard       — §7 sharded pipeline at 100k–1M clients
+  * bench_server      — §8 async server: critical-path overhead sync vs
+                        async at fleet scale
   * bench_dryrun      — §Roofline table from dry-run artifacts (if present)
 
 and mirrors every CSV record into a machine-readable ``BENCH.json``
@@ -22,6 +24,7 @@ from __future__ import annotations
 
 import argparse
 import contextlib
+import inspect
 import io
 import json
 import sys
@@ -34,6 +37,7 @@ from benchmarks import (
     bench_dryrun,
     bench_kernels,
     bench_selection,
+    bench_server,
     bench_shard,
     bench_summary,
     bench_summary_pipeline,
@@ -46,6 +50,7 @@ BENCHES = (
     ("kernels", bench_kernels.main),
     ("pipeline", bench_summary_pipeline.main),
     ("shard", bench_shard.main),
+    ("server", bench_server.main),
     ("compression", bench_compression.main),
     ("dryrun", bench_dryrun.main),
 )
@@ -92,7 +97,11 @@ def main(argv=None) -> None:
     p.add_argument("--full", action="store_true",
                    help="paper-scale sizes (slow)")
     p.add_argument("--only", default="",
-                   help="comma-separated bench names to run")
+                   help="comma-separated bench names to run (CI runs "
+                        "single groups this way, e.g. --only server)")
+    p.add_argument("--seed", type=int, default=0,
+                   help="seed for benches with randomized inputs (passed "
+                        "to every bench whose main() accepts seed=)")
     p.add_argument("--json", default="BENCH.json",
                    help="machine-readable output path")
     p.add_argument("--no-json", action="store_true",
@@ -104,10 +113,12 @@ def main(argv=None) -> None:
 
     print("name,us_per_call,derived")
     failures = []
-    # schema 3: adds the shard bench — sharded/* records with n_shards /
-    # scan_s / merge_s derived fields (validated by CI, incl. a forced
-    # 4-device host) — on top of schema 2's scenario sweep records
-    report: dict = {"schema": 3, "full": bool(args.full),
+    # schema 4: adds the async-server bench — server/* records with
+    # critical_s / background_s / mean_age / speedup derived fields (the
+    # sync-vs-async critical-path claim, gated in CI) — on top of schema
+    # 3's sharded records and schema 2's scenario sweep
+    report: dict = {"schema": 4, "full": bool(args.full),
+                    "seed": int(args.seed),
                     "scenario_presets": list(PRESET_NAMES), "benches": {}}
     for name, fn in BENCHES:
         if only and name not in only:
@@ -116,9 +127,12 @@ def main(argv=None) -> None:
         print(f"# --- {name} ---", flush=True)
         tee = _Tee(sys.stdout)
         ok = True
+        kwargs = {"fast": not args.full}
+        if "seed" in inspect.signature(fn).parameters:
+            kwargs["seed"] = args.seed
         try:
             with contextlib.redirect_stdout(tee):
-                fn(fast=not args.full)
+                fn(**kwargs)
         except Exception:  # noqa: BLE001 — keep the harness running
             failures.append(name)
             ok = False

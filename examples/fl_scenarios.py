@@ -7,8 +7,10 @@
 Each preset models a different system-heterogeneity regime (churn,
 diurnal availability, stragglers with round deadlines, label drift); the
 round loop reports how selection coverage, summary overhead, and dropped
-clients respond.  ``--registry``/``--clustering`` pick a cell of the
-support matrix (dict/streaming x kmeans/minibatch/online).
+clients respond.  ``--registry``/``--clustering``/``--server`` pick a
+cell of the support matrix (dict/streaming/sharded x kmeans/minibatch/
+online/hierarchical x sync/async — ``examples/fl_async.py`` compares the
+two servers side by side).
 """
 import argparse
 
@@ -28,13 +30,13 @@ def run_preset(preset: str, args) -> dict:
     cfg = FLConfig(rounds=args.rounds, clients_per_round=8,
                    local_steps=args.local_steps, summary=args.summary,
                    registry=args.registry, clustering=args.clustering,
-                   num_clusters=6, coreset_k=32, recluster_every=4,
-                   refresh_kl=0.05, eval_every=max(args.rounds // 4, 1),
-                   seed=args.seed)
+                   server=args.server, num_clusters=6, coreset_k=32,
+                   recluster_every=4, refresh_kl=0.05,
+                   eval_every=max(args.rounds // 4, 1), seed=args.seed)
     h = run_federated(data, cfg, scenario=scenario)
 
     print(f"\n=== {preset}  ({args.registry} registry, "
-          f"{args.clustering} clustering)")
+          f"{args.clustering} clustering, {args.server} server)")
     print("  rnd   acc  sim_time  active  join/dep  dropped  kl_cov")
     step = max(args.rounds // 8, 1)
     for r in range(0, args.rounds, step):
@@ -64,9 +66,11 @@ def main():
     ap.add_argument("--summary", default="py",
                     choices=["py", "pxy", "encoder", "none"])
     ap.add_argument("--registry", default="streaming",
-                    choices=["dict", "streaming"])
+                    choices=["dict", "streaming", "sharded"])
     ap.add_argument("--clustering", default="kmeans",
-                    choices=["kmeans", "minibatch", "online", "dbscan"])
+                    choices=["kmeans", "minibatch", "online", "dbscan",
+                             "hierarchical"])
+    ap.add_argument("--server", default="sync", choices=["sync", "async"])
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 

@@ -64,6 +64,10 @@ class SummaryRegistry:
         self.label_dists: dict[int, np.ndarray] = {}
         self.last_refresh = np.full(num_clients, -(10 ** 9), np.int64)
         self.refresh_count = 0
+        # write-version: bumped on every mutation so the async server's
+        # snapshots can record which registry state they captured
+        # (repro.server.snapshot, DESIGN.md §8)
+        self.version = 0
         # dense mirrors of ``label_dists`` / ``summaries`` so the stale scan
         # is one batched sym-KL and ``dense``/``matrix_rows`` are O(1)/O(M)
         # row reads instead of N python-level calls (allocated on first
@@ -112,6 +116,7 @@ class SummaryRegistry:
         self.label_dists[client] = np.asarray(label_dist)
         self.last_refresh[client] = round_idx
         self.refresh_count += 1
+        self.version += 1
         if self._ld_matrix is None:
             self._ld_matrix = np.zeros(
                 (self.num_clients, len(self.label_dists[client])),
@@ -132,6 +137,7 @@ class SummaryRegistry:
         self.label_dists.pop(client, None)
         self.last_refresh[client] = -(10 ** 9)
         self._has[client] = False
+        self.version += 1
         if self._ld_matrix is not None:
             self._ld_matrix[client] = 0.0
         if self._summary_matrix is not None:

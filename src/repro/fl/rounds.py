@@ -1,8 +1,17 @@
 """The federated round loop — HACCS workflow (paper Fig. 1) with the paper's
 efficient summaries as a first-class feature, driven by a fleet
-``Scenario`` (DESIGN.md §6).
+``Scenario`` (DESIGN.md §6) and executed by one of two *servers*
+(DESIGN.md §8):
 
-Per round:
+  * ``server="sync"`` — the classic sequential loop: refresh → drift-scan
+    → cluster → select → train, every stage on the round-critical path;
+  * ``server="async"`` — the event-driven pipelined selection server
+    (``repro.server``): summary ingest, drift scanning and clustering
+    refresh run off the critical path against versioned registry
+    snapshots, and selection reads the freshest complete snapshot under a
+    bounded-staleness policy.
+
+Per round (stage semantics shared by both servers via ``RoundContext``):
   1. the scenario emits a ``RoundPlan``: fleet membership (churn), per-device
      speeds/availability, label-drift positions, deadline and dropout draws,
   2. departed clients are evicted from the summary registry,
@@ -25,11 +34,14 @@ Per round:
 
 ``scenario=None`` reproduces the fixed-fleet PR-2 behavior bit-for-bit via
 ``LegacySystemScenario`` (same ``SystemModel`` RNG stream, no churn, no
-deadline) — the baseline the differential tests pin against.
+deadline) — the baseline the differential tests pin against.  Likewise
+``server="async"`` with zero ingest latency and the sync refresh cadence is
+bit-identical to ``server="sync"`` (the async differential pins).
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
@@ -82,6 +94,24 @@ class FLConfig:
     n_shards: int = 0                # 0 = one shard per local device
     shard_chunk_rows: int = 131072   # scan chunk (caps device memory)
     hier_local_k: int = 0            # per-shard centroids (0 = num_clusters)
+    # --- async selection server (DESIGN.md §8) ---
+    server: str = "sync"             # sync (sequential round loop) |
+                                     # async (event-driven pipelined server)
+    ingest_delay_rounds: int = 0     # async: rounds a computed summary is
+                                     # in flight before it lands in the
+                                     # registry (0 = same round — the
+                                     # degenerate sync-equivalent setting)
+    server_refresh: str = "sync"     # async refresh policy:
+                                     # sync (blocking, the sync cadence —
+                                     # snapshot republished every round;
+                                     # pinned ≡ server="sync") |
+                                     # staleness (bounded-staleness
+                                     # background refresher, §8)
+    snapshot_max_age: int = 3        # staleness: blocking refresh when the
+                                     # selection snapshot is older (rounds)
+    drift_mass_trigger: float = 0.05 # staleness: background refresh when
+                                     # this fraction of the live fleet
+                                     # re-ingested/churned since snapshot
     num_clusters: int = 8
     coreset_k: int = 64
     encoder_dim: int = 32
@@ -164,189 +194,320 @@ class LegacySystemScenario:
                    drift_per_round=float(d["drift_per_round"]))
 
 
-def run_federated(data: FederatedDataset, cfg: FLConfig,
-                  system_spec: SystemSpec | None = None,
-                  scenario=None) -> dict:
-    spec = data.spec
-    if scenario is None:
-        scenario = LegacySystemScenario(
-            spec.num_clients, system_spec or SystemSpec(), seed=cfg.seed + 1,
-            drift_start=cfg.drift_start, drift_per_round=cfg.drift_per_round)
-    else:
-        if system_spec is not None:
-            raise ValueError(
-                "system_spec and scenario are mutually exclusive — a "
-                "scenario carries its own device/system model")
-        if scenario.num_clients != spec.num_clients:
-            raise ValueError(
-                f"scenario models {scenario.num_clients} clients but the "
-                f"dataset has {spec.num_clients}")
-        scenario.reset()
-    rng = np.random.RandomState(cfg.seed)
-    key = jax.random.PRNGKey(cfg.seed)
+class RoundContext:
+    """Shared state + per-round pipeline stages for one federated run.
 
-    init_fn, apply_fn = make_classifier(cfg.model, spec.feature_shape,
-                                        spec.num_classes, hidden=cfg.hidden)
-    loss_fn = xent_loss(apply_fn)
-    runtime = ClientRuntime(loss_fn, sgd(cfg.lr), cfg.batch_size,
-                            fedprox_mu=cfg.fedprox_mu)
-    params = init_fn(key)
+    Both servers — the inline sync loop (``_drive_sync``) and the
+    event-driven async selection server (``repro.server.async_rounds``) —
+    execute the *same* stage methods below; only the orchestration differs
+    (what runs on the round-critical path, and whether selection reads the
+    live registry or a published snapshot).  That shared core is the
+    structural half of the async ≡ sync differential pin: with zero ingest
+    latency and the sync refresh cadence, the async event schedule calls
+    exactly this sequence with exactly these arguments.
+    """
 
-    # summary encoder (paper: pretrained MobileNet hidden layer)
-    enc_cfg = CNNConfig(in_channels=spec.feature_shape[-1],
-                        feature_dim=cfg.encoder_dim)
-    enc_params = build_cnn(enc_cfg, jax.random.PRNGKey(7))
-    enc_fn = jax.jit(lambda imgs: cnn_apply(enc_params, imgs))
+    def __init__(self, data: FederatedDataset, cfg: FLConfig, scenario):
+        spec = data.spec
+        self.data, self.cfg, self.spec, self.scenario = data, cfg, spec, \
+            scenario
+        self.rng = np.random.RandomState(cfg.seed)
+        key = jax.random.PRNGKey(cfg.seed)
 
-    if cfg.summary_engine not in ("batched", "perclient"):
-        raise ValueError(f"unknown summary_engine: {cfg.summary_engine}")
-    engine = None
-    if cfg.summary != "none" and cfg.summary_engine == "batched":
-        engine = BatchedSummaryEngine(
-            cfg.summary, spec.num_classes, encoder_fn=enc_fn,
-            coreset_k=cfg.coreset_k, bins=cfg.bins)
-    policy = RefreshPolicy(cfg.refresh_max_age, cfg.refresh_kl)
-    if cfg.registry == "streaming":
-        registry = StreamingSummaryRegistry(
-            spec.num_clients, policy, num_classes=spec.num_classes)
-    elif cfg.registry == "sharded":
-        registry = ShardedSummaryRegistry(
-            spec.num_clients, policy, num_classes=spec.num_classes,
-            n_shards=cfg.n_shards or None,
-            chunk_rows=cfg.shard_chunk_rows)
-    elif cfg.registry == "dict":
-        registry = SummaryRegistry(spec.num_clients, policy)
-    else:
-        raise ValueError(f"unknown registry: {cfg.registry}")
-    if cfg.clustering not in ("kmeans", "minibatch", "dbscan", "online",
-                              "hierarchical"):
-        raise ValueError(f"unknown clustering: {cfg.clustering}")
-    maintainer = None
-    online_policy = OnlinePolicy(inertia_ratio=cfg.online_inertia_ratio,
-                                 reseed_every=cfg.online_reseed_every)
-    if cfg.clustering == "online":
-        maintainer = OnlineClusterMaintainer(cfg.num_clusters, online_policy)
-    elif cfg.clustering == "hierarchical":
-        maintainer = HierarchicalClusterMaintainer(
-            cfg.num_clusters, n_shards=cfg.n_shards or None,
-            local_k=cfg.hier_local_k or None, policy=online_policy)
-    sel_cfg = SelectionConfig(cfg.clients_per_round, cfg.selection)
+        init_fn, apply_fn = make_classifier(cfg.model, spec.feature_shape,
+                                            spec.num_classes,
+                                            hidden=cfg.hidden)
+        loss_fn = xent_loss(apply_fn)
+        self.runtime = ClientRuntime(loss_fn, sgd(cfg.lr), cfg.batch_size,
+                                     fedprox_mu=cfg.fedprox_mu)
+        self.params = init_fn(key)
 
-    test_x, test_y = data.test_set()
-    test_x, test_y = jnp.asarray(test_x), jnp.asarray(test_y)
+        # summary encoder (paper: pretrained MobileNet hidden layer)
+        enc_cfg = CNNConfig(in_channels=spec.feature_shape[-1],
+                            feature_dim=cfg.encoder_dim)
+        enc_params = build_cnn(enc_cfg, jax.random.PRNGKey(7))
+        self.enc_fn = jax.jit(lambda imgs: cnn_apply(enc_params, imgs))
 
-    @jax.jit
-    def evaluate(p):
-        logits = apply_fn(p, test_x)
-        return jnp.mean((jnp.argmax(logits, -1) == test_y).astype(jnp.float32))
+        if cfg.summary_engine not in ("batched", "perclient"):
+            raise ValueError(f"unknown summary_engine: {cfg.summary_engine}")
+        self.engine = None
+        if cfg.summary != "none" and cfg.summary_engine == "batched":
+            self.engine = BatchedSummaryEngine(
+                cfg.summary, spec.num_classes, encoder_fn=self.enc_fn,
+                coreset_k=cfg.coreset_k, bins=cfg.bins)
+        policy = RefreshPolicy(cfg.refresh_max_age, cfg.refresh_kl)
+        if cfg.registry == "streaming":
+            self.registry = StreamingSummaryRegistry(
+                spec.num_clients, policy, num_classes=spec.num_classes)
+        elif cfg.registry == "sharded":
+            self.registry = ShardedSummaryRegistry(
+                spec.num_clients, policy, num_classes=spec.num_classes,
+                n_shards=cfg.n_shards or None,
+                chunk_rows=cfg.shard_chunk_rows)
+        elif cfg.registry == "dict":
+            self.registry = SummaryRegistry(spec.num_clients, policy)
+        else:
+            raise ValueError(f"unknown registry: {cfg.registry}")
+        if cfg.clustering not in ("kmeans", "minibatch", "dbscan", "online",
+                                  "hierarchical"):
+            raise ValueError(f"unknown clustering: {cfg.clustering}")
+        if cfg.server not in ("sync", "async"):
+            raise ValueError(f"unknown server: {cfg.server}")
+        if cfg.server_refresh not in ("sync", "staleness"):
+            raise ValueError(f"unknown server_refresh: {cfg.server_refresh}")
+        self.maintainer = None
+        online_policy = OnlinePolicy(inertia_ratio=cfg.online_inertia_ratio,
+                                     reseed_every=cfg.online_reseed_every)
+        if cfg.clustering == "online":
+            self.maintainer = OnlineClusterMaintainer(cfg.num_clusters,
+                                                      online_policy)
+        elif cfg.clustering == "hierarchical":
+            self.maintainer = HierarchicalClusterMaintainer(
+                cfg.num_clusters, n_shards=cfg.n_shards or None,
+                local_k=cfg.hier_local_k or None, policy=online_policy)
+        self.sel_cfg = SelectionConfig(cfg.clients_per_round, cfg.selection)
 
-    assignment = np.zeros(spec.num_clients, np.int64)
-    num_clusters = 1
-    history = {"round": [], "acc": [], "sim_time": [], "refreshes": [],
-               "wall_summary_s": [], "selected": [], "completed": [],
-               "dropped": [], "kl_coverage": [], "n_active": [],
-               "n_joined": [], "n_departed": []}
-    sim_time = 0.0
-    dropped_rounds = 0
+        test_x, test_y = data.test_set()
+        test_x, test_y = jnp.asarray(test_x), jnp.asarray(test_y)
 
-    for rnd in range(cfg.rounds):
-        plan = scenario.round_plan(rnd)
+        @jax.jit
+        def evaluate(p):
+            logits = apply_fn(p, test_x)
+            return jnp.mean((jnp.argmax(logits, -1)
+                             == test_y).astype(jnp.float32))
+
+        self.evaluate = evaluate
+
+        self.assignment = np.zeros(spec.num_clients, np.int64)
+        self.num_clusters = 1
+        self.history: dict = {
+            "round": [], "acc": [], "sim_time": [], "refreshes": [],
+            "wall_summary_s": [], "selected": [], "completed": [],
+            "dropped": [], "kl_coverage": [], "n_active": [],
+            "n_joined": [], "n_departed": [],
+            # server-overhead accounting (DESIGN.md §8): wall seconds of
+            # the server-side stages and the share that sat on the
+            # round-critical path; snapshot lineage for async runs
+            "server_scan_s": [], "server_cluster_s": [], "server_drain_s": [],
+            "overhead_critical_s": [], "snapshot_version": [],
+            "snapshot_age": []}
+        self.sim_time = 0.0
+        self.dropped_rounds = 0
+        self.recluster_count = 0
+        self._acc = float("nan")
+        self._scan_s = self._cluster_s = self._drain_s = 0.0
+
+    # ------------------------------------------------------------------
+    # stage: membership + cheap drift signal
+
+    @property
+    def uses_summaries(self) -> bool:
+        return self.cfg.summary != "none" and self.cfg.selection == "haccs"
+
+    def begin_round(self, rnd: int):
+        """Advance the scenario, evict departures, refresh the cheap P(y)
+        drift signal.  Resets the per-round server-overhead meters."""
+        self._scan_s = self._cluster_s = self._drain_s = 0.0
+        plan = self.scenario.round_plan(rnd)
         for c in plan.departed:
-            registry.remove(int(c))
-        drift = plan.drift
+            self.registry.remove(int(c))
         # cheap drift signal: current P(y) for every client (pure, no RNG)
-        fresh = data.client_label_dists(drift)
-        summary_times: dict[int, float] = {}
-        wall_summary = 0.0
+        fresh = self.data.client_label_dists(plan.drift)
+        return plan, fresh
 
-        if cfg.summary != "none" and cfg.selection == "haccs":
-            stale = [int(c) for c in np.flatnonzero(
-                registry.stale_mask(rnd, fresh, active=plan.active))]
-            # store the same signal we compare against (cheap P(y)), so
-            # the KL drift test fires on real drift, not sampling noise
-            if engine is not None:
-                results = engine.summarize_clients(
-                    stale, data.sizes,
-                    lambda c: data.client_data(c, float(drift[c])),
-                    lambda c: jax.random.PRNGKey(rnd * 100003 + c))
-                for c, res in results.items():
-                    summary_times[c] = res.seconds
-                    wall_summary += res.seconds
-                if isinstance(registry, StreamingSummaryRegistry):
-                    if results:
-                        ids = list(results)
-                        registry.update_batch(
-                            ids, rnd,
-                            np.stack([results[c].summary for c in ids]),
-                            fresh[ids])
-                else:
-                    for c, res in results.items():
-                        registry.update(c, rnd, res.summary, fresh[c])
+    # ------------------------------------------------------------------
+    # stage: drift scan
+
+    def scan_stale(self, rnd: int, plan: RoundPlan, fresh: np.ndarray,
+                   exclude=None) -> list[int]:
+        """The registry's staleness scan over the *active* fleet.
+        ``exclude`` drops clients whose refresh is already in flight
+        (async ingest pipelining) — empty in sync mode by construction."""
+        if not self.uses_summaries:
+            return []
+        t0 = time.perf_counter()
+        mask = self.registry.stale_mask(rnd, fresh, active=plan.active)
+        self._scan_s += time.perf_counter() - t0
+        stale = [int(c) for c in np.flatnonzero(mask)]
+        if exclude:
+            stale = [c for c in stale if c not in exclude]
+        return stale
+
+    # ------------------------------------------------------------------
+    # stage: client summary computation (the paper's measured overhead)
+
+    def compute_summaries(self, rnd: int, stale: list[int],
+                          drift: np.ndarray):
+        """-> (summaries {c: array} in ingest order, seconds {c: s}, wall).
+
+        Pure compute — nothing is written to the registry here, so the
+        async server can hold results in its ingest queue.  PRNG keys are
+        a pure function of (round, client): the batched and per-client
+        paths stay bitwise-identical, and so do sync and async servers.
+        """
+        summaries: dict[int, np.ndarray] = {}
+        times: dict[int, float] = {}
+        wall = 0.0
+        if not stale:
+            return summaries, times, wall
+        if self.engine is not None:
+            results = self.engine.summarize_clients(
+                stale, self.data.sizes,
+                lambda c: self.data.client_data(c, float(drift[c])),
+                lambda c: jax.random.PRNGKey(rnd * 100003 + c))
+            for c, res in results.items():
+                summaries[c] = res.summary
+                times[c] = res.seconds
+                wall += res.seconds
+        else:
+            cfg = self.cfg
+            for c in stale:
+                feats, labels, valid = self.data.client_data(
+                    c, float(drift[c]))
+                s, _ld_emp, dt = timed_summary(
+                    cfg.summary, feats, labels, valid, self.spec.num_classes,
+                    encoder_fn=self.enc_fn, coreset_k=cfg.coreset_k,
+                    bins=cfg.bins,
+                    key=jax.random.PRNGKey(rnd * 100003 + c))
+                summaries[c] = s
+                times[c] = dt
+                wall += dt
+        return summaries, times, wall
+
+    # ------------------------------------------------------------------
+    # stage: registry ingest (O(M) scatter)
+
+    def ingest(self, rnd: int, summaries: dict[int, np.ndarray],
+               fresh_rows) -> None:
+        """Absorb one batch of recomputed summaries into the live registry.
+        ``rnd`` is the *compute* round (the data's age), ``fresh_rows`` is
+        indexable by client id — the full ``[N, C]`` array in sync mode, a
+        per-id dict for queued async batches.  We store the same signal the
+        scan compares against (cheap P(y)), so the KL drift test fires on
+        real drift, not sampling noise."""
+        if not summaries:
+            return
+        t0 = time.perf_counter()
+        if isinstance(self.registry, StreamingSummaryRegistry):
+            ids = list(summaries)
+            self.registry.update_batch(
+                ids, rnd, np.stack([summaries[c] for c in ids]),
+                np.stack([fresh_rows[c] for c in ids]))
+        else:
+            for c, s in summaries.items():
+                self.registry.update(c, rnd, s, fresh_rows[c])
+        self._drain_s += time.perf_counter() - t0
+
+    # ------------------------------------------------------------------
+    # stage: clustering refresh
+
+    def sync_recluster_due(self, rnd: int, plan: RoundPlan,
+                           stale: list[int]) -> bool:
+        """The sync loop's clustering-refresh cadence.  The async server's
+        ``server_refresh="sync"`` policy calls exactly this predicate —
+        the other structural half of the differential pin."""
+        if not self.uses_summaries:
+            return False
+        churned = plan.joined.size > 0 or plan.departed.size > 0
+        if self.maintainer is not None:
+            # online maintenance runs whenever anything moved (the
+            # maintainer escalates to a full refit itself)
+            return bool(stale) or churned or self.maintainer.centroids is None
+        cfg = self.cfg
+        return bool(stale) and (rnd % cfg.recluster_every == 0 or rnd == 0
+                                or len(stale) > self.spec.num_clients // 4
+                                or churned)
+
+    def sync_drifted(self, plan: RoundPlan, stale: list[int]) -> np.ndarray:
+        """The drifted-row set the sync cadence hands the maintainer:
+        this round's stale clients plus any churned ids (rows keep fleet
+        indexing, so the maintainer's state stays aligned under churn)."""
+        drifted = np.asarray(stale, np.int64)
+        if plan.joined.size > 0 or plan.departed.size > 0:
+            drifted = np.union1d(
+                drifted, np.concatenate([plan.joined, plan.departed]))
+        return drifted
+
+    def recluster_now(self, rnd: int, active: np.ndarray,
+                      drifted: np.ndarray) -> float:
+        """Unconditional clustering rebuild/refresh from the live registry
+        (the caller owns the cadence: sync gating or the async staleness
+        policy).  Returns the wall seconds this rebuild took."""
+        cfg, spec = self.cfg, self.spec
+        t0 = time.perf_counter()
+        if self.maintainer is not None:
+            # online maintenance: assign-only for the drifted set; rows
+            # keep fleet indexing (zeros for absent clients) so the
+            # maintainer's state stays aligned under churn
+            self.maintainer.refresh(
+                np.asarray(self.registry.dense(), np.float32),
+                np.asarray(drifted, np.int64),
+                jax.random.PRNGKey(cfg.seed + rnd),
+                live=self.registry.has_mask() & active)
+            if self.maintainer.assignment is not None:
+                self.assignment = self.maintainer.assignment
+                self.num_clusters = cfg.num_clusters
+        else:
+            have_ids = np.flatnonzero(self.registry.has_mask() & active)
+            X = jnp.asarray(self.registry.matrix_rows(have_ids), jnp.float32)
+            assignment = np.full(spec.num_clients, -1, np.int64)
+            if cfg.clustering in ("kmeans", "minibatch"):
+                cluster_fn = (minibatch_kmeans
+                              if cfg.clustering == "minibatch" else kmeans)
+                res = cluster_fn(X, cfg.num_clusters,
+                                 jax.random.PRNGKey(cfg.seed + rnd))
+                assignment[have_ids] = np.asarray(res.assignment, np.int64)
+                self.num_clusters = cfg.num_clusters
             else:
-                for c in stale:
-                    feats, labels, valid = data.client_data(c, float(drift[c]))
-                    s, _ld_emp, dt = timed_summary(
-                        cfg.summary, feats, labels, valid, spec.num_classes,
-                        encoder_fn=enc_fn, coreset_k=cfg.coreset_k,
-                        bins=cfg.bins,
-                        key=jax.random.PRNGKey(rnd * 100003 + c))
-                    registry.update(c, rnd, s, fresh[c])
-                    summary_times[c] = dt
-                    wall_summary += dt
+                med = float(jnp.median(jnp.sqrt(
+                    jnp.sum(jnp.square(X - X.mean(0)), -1))))
+                res = dbscan(X, eps=med * 0.5, min_samples=3)
+                assignment[have_ids] = np.asarray(res.labels, np.int64)
+                self.num_clusters = max(int(res.num_clusters), 1)
+            self.assignment = assignment
+        dt = time.perf_counter() - t0
+        self._cluster_s += dt
+        self.recluster_count += 1
+        return dt
 
-            churned = plan.joined.size > 0 or plan.departed.size > 0
-            if maintainer is not None:
-                # online maintenance: assign-only for the drifted set every
-                # round; the maintainer escalates to a full refit itself.
-                # Rows keep fleet indexing (zeros for absent clients) so the
-                # maintainer's state stays aligned under churn.
-                if stale or churned or maintainer.centroids is None:
-                    drifted = np.asarray(stale, np.int64)
-                    if churned:
-                        drifted = np.union1d(
-                            drifted, np.concatenate([plan.joined,
-                                                     plan.departed]))
-                    maintainer.refresh(
-                        np.asarray(registry.dense(), np.float32),
-                        drifted, jax.random.PRNGKey(cfg.seed + rnd),
-                        live=registry.has_mask() & plan.active)
-                if maintainer.assignment is not None:
-                    assignment = maintainer.assignment
-                    num_clusters = cfg.num_clusters
-            elif stale and (rnd % cfg.recluster_every == 0 or rnd == 0
-                            or len(stale) > spec.num_clients // 4
-                            or churned):
-                have_ids = np.flatnonzero(registry.has_mask() & plan.active)
-                X = jnp.asarray(registry.matrix_rows(have_ids), jnp.float32)
-                assignment = np.full(spec.num_clients, -1, np.int64)
-                if cfg.clustering in ("kmeans", "minibatch"):
-                    cluster_fn = (minibatch_kmeans
-                                  if cfg.clustering == "minibatch" else kmeans)
-                    res = cluster_fn(X, cfg.num_clusters,
-                                     jax.random.PRNGKey(cfg.seed + rnd))
-                    assignment[have_ids] = np.asarray(res.assignment, np.int64)
-                    num_clusters = cfg.num_clusters
-                else:
-                    med = float(jnp.median(jnp.sqrt(
-                        jnp.sum(jnp.square(X - X.mean(0)), -1))))
-                    res = dbscan(X, eps=med * 0.5, min_samples=3)
-                    assignment[have_ids] = np.asarray(res.labels, np.int64)
-                    num_clusters = max(int(res.num_clusters), 1)
+    # ------------------------------------------------------------------
+    # stage: selection
 
+    def select(self, rnd: int, plan: RoundPlan, assignment=None,
+               num_clusters=None, has_mask=None) -> np.ndarray:
+        """HACCS selection restricted to the current fleet.  The sync
+        server reads the live registry/clustering (defaults); the async
+        server passes a published snapshot's view instead."""
+        cfg = self.cfg
+        if assignment is None:
+            assignment = self.assignment
+        if num_clusters is None:
+            num_clusters = self.num_clusters
         # selection sees only the current fleet: clients without a live
         # summary row (departed / just joined between reclusters) fall out
         # of cluster quotas, absent clients out of the candidate pool
-        if cfg.selection == "haccs" and cfg.summary != "none":
+        if self.uses_summaries:
+            if has_mask is None:
+                has_mask = self.registry.has_mask()
             sel_assignment = assignment.copy()
-            sel_assignment[~(registry.has_mask() & plan.active)] = -1
+            sel_assignment[~(np.asarray(has_mask, bool) & plan.active)] = -1
         else:
             sel_assignment = assignment
         selected = select_devices(sel_assignment, num_clusters, plan.speeds,
-                                  plan.available, sel_cfg, rng,
+                                  plan.available, self.sel_cfg, self.rng,
                                   active=plan.active)
-        scenario.note_selected(selected)
+        self.scenario.note_selected(selected)
+        return np.asarray(selected, np.int64)
 
-        sel = np.asarray(selected, np.int64)
+    # ------------------------------------------------------------------
+    # stage: training + accounting
+
+    def train_and_log(self, rnd: int, plan: RoundPlan, fresh: np.ndarray,
+                      sel: np.ndarray, summary_times: dict[int, float],
+                      wall_summary: float, critical_s: float,
+                      snapshot_version: int, snapshot_age: int) -> None:
+        cfg = self.cfg
+        drift = plan.drift
         if sel.size:
             if plan.summary_cost is None:
                 # legacy accounting: measured wall seconds on the critical
@@ -378,14 +539,16 @@ def run_federated(data: FederatedDataset, cfg: FLConfig,
         for i, c in enumerate(sel):
             if not completed[i]:
                 continue
-            feats, labels, valid = data.client_data(int(c), float(drift[c]))
-            delta, n, _ = local_train(runtime, params, feats, labels, valid,
-                                      cfg.local_steps, rng)
+            feats, labels, valid = self.data.client_data(int(c),
+                                                         float(drift[c]))
+            delta, n, _ = local_train(self.runtime, self.params, feats,
+                                      labels, valid, cfg.local_steps,
+                                      self.rng)
             deltas.append(delta)
             sizes.append(n)
-        params = fedavg(params, deltas, sizes)
+        self.params = fedavg(self.params, deltas, sizes)
         if sel.size and not completed.any():
-            dropped_rounds += 1
+            self.dropped_rounds += 1
 
         # selected-client KL coverage: how far the aggregated clients' label
         # mixture sits from the active fleet's (lower = better coverage)
@@ -394,29 +557,87 @@ def run_federated(data: FederatedDataset, cfg: FLConfig,
         kl_cov = (sym_kl(fresh[comp_ids].mean(0), fresh[act_ids].mean(0))
                   if comp_ids.size and act_ids.size else float("nan"))
 
-        sim_time += t_round
+        self.sim_time += t_round
         if rnd % cfg.eval_every == 0 or rnd == cfg.rounds - 1:
-            acc = float(evaluate(params))
-        history["round"].append(rnd)
-        history["acc"].append(acc)
-        history["sim_time"].append(sim_time)
-        history["refreshes"].append(registry.refresh_count)
-        history["wall_summary_s"].append(wall_summary)
-        history["selected"].append(sel.tolist())
-        history["completed"].append(sel[completed].tolist())
-        history["dropped"].append(int(sel.size - completed.sum()))
-        history["kl_coverage"].append(kl_cov)
-        history["n_active"].append(int(plan.active.sum()))
-        history["n_joined"].append(int(plan.joined.size))
-        history["n_departed"].append(int(plan.departed.size))
+            self._acc = float(self.evaluate(self.params))
+        h = self.history
+        h["round"].append(rnd)
+        h["acc"].append(self._acc)
+        h["sim_time"].append(self.sim_time)
+        h["refreshes"].append(self.registry.refresh_count)
+        h["wall_summary_s"].append(wall_summary)
+        h["selected"].append(sel.tolist())
+        h["completed"].append(sel[completed].tolist())
+        h["dropped"].append(int(sel.size - completed.sum()))
+        h["kl_coverage"].append(kl_cov)
+        h["n_active"].append(int(plan.active.sum()))
+        h["n_joined"].append(int(plan.joined.size))
+        h["n_departed"].append(int(plan.departed.size))
+        h["server_scan_s"].append(self._scan_s)
+        h["server_cluster_s"].append(self._cluster_s)
+        h["server_drain_s"].append(self._drain_s)
+        h["overhead_critical_s"].append(critical_s)
+        h["snapshot_version"].append(snapshot_version)
+        h["snapshot_age"].append(snapshot_age)
 
-    history["final_acc"] = history["acc"][-1]
-    history["params"] = params
-    history["dropped_rounds"] = dropped_rounds
-    history["scenario"] = scenario.to_config()
-    if maintainer is not None:
-        history["online_cluster"] = {"full_fits": maintainer.full_fits,
-                                     "reseeds": maintainer.reseeds}
-        if isinstance(maintainer, HierarchicalClusterMaintainer):
-            history["online_cluster"]["merges"] = maintainer.merges
-    return history
+    def round_overhead_s(self) -> float:
+        """This round's server-side wall seconds so far (scan + cluster +
+        ingest scatter) — the sync server's critical-path charge."""
+        return self._scan_s + self._cluster_s + self._drain_s
+
+    def finish(self) -> dict:
+        h = self.history
+        h["final_acc"] = h["acc"][-1]
+        h["params"] = self.params
+        h["dropped_rounds"] = self.dropped_rounds
+        h["scenario"] = self.scenario.to_config()
+        if self.maintainer is not None:
+            h["online_cluster"] = {"full_fits": self.maintainer.full_fits,
+                                   "reseeds": self.maintainer.reseeds}
+            if isinstance(self.maintainer, HierarchicalClusterMaintainer):
+                h["online_cluster"]["merges"] = self.maintainer.merges
+        return h
+
+
+def _drive_sync(ctx: RoundContext) -> dict:
+    """The sequential server: every stage on the round-critical path."""
+    cfg = ctx.cfg
+    for rnd in range(cfg.rounds):
+        plan, fresh = ctx.begin_round(rnd)
+        stale = ctx.scan_stale(rnd, plan, fresh)
+        summaries, times, wall = ctx.compute_summaries(rnd, stale, plan.drift)
+        ctx.ingest(rnd, summaries, fresh)
+        if ctx.sync_recluster_due(rnd, plan, stale):
+            ctx.recluster_now(rnd, plan.active, ctx.sync_drifted(plan, stale))
+        sel = ctx.select(rnd, plan)
+        ctx.train_and_log(rnd, plan, fresh, sel, times, wall,
+                          critical_s=ctx.round_overhead_s(),
+                          snapshot_version=ctx.recluster_count,
+                          snapshot_age=0)
+    return ctx.finish()
+
+
+def run_federated(data: FederatedDataset, cfg: FLConfig,
+                  system_spec: SystemSpec | None = None,
+                  scenario=None) -> dict:
+    spec = data.spec
+    if scenario is None:
+        scenario = LegacySystemScenario(
+            spec.num_clients, system_spec or SystemSpec(), seed=cfg.seed + 1,
+            drift_start=cfg.drift_start, drift_per_round=cfg.drift_per_round)
+    else:
+        if system_spec is not None:
+            raise ValueError(
+                "system_spec and scenario are mutually exclusive — a "
+                "scenario carries its own device/system model")
+        if scenario.num_clients != spec.num_clients:
+            raise ValueError(
+                f"scenario models {scenario.num_clients} clients but the "
+                f"dataset has {spec.num_clients}")
+        scenario.reset()
+    ctx = RoundContext(data, cfg, scenario)
+    if cfg.server == "async":
+        # imported lazily: repro.server imports this module's RoundContext
+        from repro.server.async_rounds import drive_async
+        return drive_async(ctx)
+    return _drive_sync(ctx)

@@ -1,0 +1,16 @@
+"""Asynchronous pipelined selection server (DESIGN.md §8): deterministic
+event engine, versioned immutable registry snapshots, summary-ingest
+queue, background clustering refresher with a bounded-staleness policy,
+and the event-driven round driver behind
+``repro.fl.run_federated(..., server="async")``."""
+from repro.server.events import Event, EventQueue, Stage  # noqa: F401
+from repro.server.ingest import IngestQueue, SummaryBatch  # noqa: F401
+from repro.server.refresher import (  # noqa: F401
+    ClusterRefresher,
+    StalenessPolicy,
+)
+from repro.server.snapshot import (  # noqa: F401
+    RegistrySnapshot,
+    SnapshotStore,
+    capture,
+)

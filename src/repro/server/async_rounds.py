@@ -1,0 +1,154 @@
+"""Event-driven async round driver (DESIGN.md §8).
+
+``run_federated(..., server="async")`` lands here: the same per-round
+stage methods the sync loop runs (``fl.rounds.RoundContext``), but
+orchestrated through the deterministic event engine so summary ingest,
+drift scanning and clustering refresh are *pipelined* instead of
+serialized onto the round-critical path:
+
+  round r:  MEMBERSHIP → PUBLISH → DRAIN → SCAN → COMPUTE → INGEST
+            → REFRESH → SELECT → TRAIN
+
+  * DRAIN lands summary batches whose ingest latency elapsed (computed in
+    earlier rounds); INGEST lands zero-latency batches from this round's
+    COMPUTE — both through the shared O(M) registry scatter.
+  * REFRESH is the ``ClusterRefresher`` policy step: background rebuilds
+    travel forward as PUBLISH events into round r+1, so their cost
+    overlaps round r's training; blocking rebuilds (staleness bound hit,
+    or ``server_refresh="sync"``) are charged to the critical path.
+  * SELECT never touches the live registry: it reads the freshest
+    complete ``RegistrySnapshot`` — a consistent (assignment, has_mask,
+    num_clusters) view — while ingest may already be writing the next
+    registry version.
+
+Critical-path accounting: ``overhead_critical_s`` records, per round, the
+server-side wall seconds selection actually had to wait for — everything
+(scan + cluster + drain) under ``server_refresh="sync"`` (which is the
+sync loop's charge by definition), only blocking rebuilds under
+``server_refresh="staleness"``.  ``benchmarks/bench_server.py`` measures
+the resulting ≥2× critical-path reduction at fleet scale.
+
+With ``ingest_delay_rounds=0`` and ``server_refresh="sync"`` the event
+schedule degenerates to exactly the sync stage sequence with exactly the
+same arguments — ``tests/test_server.py`` and the differential harness
+pin the resulting traces bitwise across seeds, churn scenarios, and all
+registry × clustering backends.
+"""
+from __future__ import annotations
+
+from repro.server.events import EventQueue, Stage
+from repro.server.ingest import IngestQueue
+from repro.server.refresher import ClusterRefresher, StalenessPolicy
+from repro.server.snapshot import SnapshotStore, capture
+
+
+def drive_async(ctx) -> dict:
+    """Run one federated training under the async selection server."""
+    cfg = ctx.cfg
+    queue = EventQueue()
+    ingest_q = IngestQueue()
+    # seed snapshot: the pre-training server state (no summaries, the
+    # all-zeros assignment the sync loop also starts from)
+    store = SnapshotStore(capture(0, -1, ctx.registry, ctx.assignment,
+                                  ctx.num_clusters))
+    refresher = ClusterRefresher(
+        ctx, store, mode=cfg.server_refresh,
+        policy=StalenessPolicy(max_snapshot_age=cfg.snapshot_max_age,
+                               drift_mass_trigger=cfg.drift_mass_trigger))
+    state: dict[int, dict] = {}   # per-round pipeline state, keyed by round
+
+    def schedule_round(rnd: int) -> None:
+        queue.push(rnd, Stage.MEMBERSHIP, "membership", rnd)
+        queue.push(rnd, Stage.DRAIN, "drain", rnd)
+        queue.push(rnd, Stage.SCAN, "scan", rnd)
+        queue.push(rnd, Stage.COMPUTE, "compute", rnd)
+        queue.push(rnd, Stage.REFRESH, "refresh", rnd)
+        queue.push(rnd, Stage.SELECT, "select", rnd)
+        queue.push(rnd, Stage.TRAIN, "train", rnd)
+
+    def on_membership(ev) -> None:
+        rnd = ev.payload
+        plan, fresh = ctx.begin_round(rnd)
+        state[rnd] = {"plan": plan, "fresh": fresh, "stale": [],
+                      "times": {}, "wall": 0.0, "blocking": 0.0}
+        refresher.note_churn(plan)
+
+    def on_publish(ev) -> None:
+        store.publish(ev.payload)
+
+    def on_drain(ev) -> None:
+        for batch in ingest_q.pop_ready(ev.payload):
+            ctx.ingest(batch.compute_round, batch.summaries,
+                       batch.fresh_rows)
+            refresher.note_ingested(batch.summaries)
+
+    def on_scan(ev) -> None:
+        rnd = ev.payload
+        st = state[rnd]
+        st["stale"] = ctx.scan_stale(rnd, st["plan"], st["fresh"],
+                                     exclude=ingest_q.in_flight())
+
+    def on_compute(ev) -> None:
+        rnd = ev.payload
+        st = state[rnd]
+        summaries, times, wall = ctx.compute_summaries(
+            rnd, st["stale"], st["plan"].drift)
+        st["times"], st["wall"] = times, wall
+        batch = ingest_q.enqueue(rnd, cfg.ingest_delay_rounds, summaries,
+                                 st["fresh"])
+        if batch is not None and batch.ready_round < cfg.rounds:
+            # wake the drain when the latency elapses; zero-latency
+            # batches land this round, after COMPUTE but before REFRESH.
+            # Batches that would land after the final round stay queued
+            # (still visible to in-flight dedup) but never scatter —
+            # nothing reads the registry after the last selection
+            stage = Stage.INGEST if batch.ready_round == rnd else Stage.DRAIN
+            queue.push(batch.ready_round, stage, "drain", batch.ready_round)
+
+    def on_refresh(ev) -> None:
+        rnd = ev.payload
+        st = state[rnd]
+        blocking, background = refresher.step(rnd, st["plan"], st["stale"])
+        st["blocking"] = blocking
+        if background is not None and rnd + 1 < cfg.rounds:
+            queue.push(rnd + 1, Stage.PUBLISH, "publish", background)
+
+    def on_select(ev) -> None:
+        rnd = ev.payload
+        st = state[rnd]
+        snap = store.latest()
+        st["snap"] = snap
+        st["sel"] = ctx.select(rnd, st["plan"], assignment=snap.assignment,
+                               num_clusters=snap.num_clusters,
+                               has_mask=snap.has_mask)
+
+    def on_train(ev) -> None:
+        rnd = ev.payload
+        st = state.pop(rnd)
+        critical = (ctx.round_overhead_s() if cfg.server_refresh == "sync"
+                    else st["blocking"])
+        ctx.train_and_log(rnd, st["plan"], st["fresh"], st["sel"],
+                          st["times"], st["wall"], critical_s=critical,
+                          snapshot_version=st["snap"].version,
+                          snapshot_age=st["snap"].age(rnd))
+        if rnd + 1 < cfg.rounds:
+            schedule_round(rnd + 1)
+
+    schedule_round(0)
+    queue.run({"membership": on_membership, "publish": on_publish,
+               "drain": on_drain, "scan": on_scan, "compute": on_compute,
+               "refresh": on_refresh, "select": on_select,
+               "train": on_train})
+
+    history = ctx.finish()
+    history["server"] = {
+        "mode": "async", "refresh": cfg.server_refresh,
+        "ingest_delay_rounds": cfg.ingest_delay_rounds,
+        "events": queue.processed,
+        "snapshots_published": store.published,
+        "ingest_batches": ingest_q.enqueued_batches,
+        "blocking_refreshes": refresher.blocking_builds,
+        "background_refreshes": refresher.background_builds,
+        "background_s": refresher.background_s,
+    }
+    return history

@@ -1,0 +1,91 @@
+"""Deterministic discrete-event engine for the async selection server
+(DESIGN.md §8).
+
+The server's unit of simulated time is the scenario's round clock: every
+event is keyed by ``(round_idx, stage, seq)`` where ``stage`` is the fixed
+intra-round pipeline order (membership → publish → drain → scan → compute
+→ ingest → refresh → select → train) and ``seq`` is a monotonically
+increasing insertion counter that breaks ties.  Sim *seconds* within a
+round come from the round plan's deadline semantics (``fl.rounds``), so
+the engine never orders by wall-clock floats — two runs with the same
+config pop the exact same event sequence, which is what makes the async
+server replayable and differentially testable against the sync loop.
+
+An event's ``payload`` is opaque to the engine; handlers are dispatched by
+``kind`` through ``EventQueue.run``.  Handlers may push further events
+(including into later rounds — that is how summary batches with a nonzero
+ingest latency and background snapshot publishes travel forward in time).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import heapq
+from typing import Any, Callable
+
+
+class Stage(enum.IntEnum):
+    """Fixed intra-round ordering of the server pipeline."""
+    MEMBERSHIP = 0   # scenario plan + registry evictions
+    PUBLISH = 1      # background snapshots built last round go live
+    DRAIN = 2        # summary batches whose latency elapsed land
+    SCAN = 3         # registry drift scan over the active fleet
+    COMPUTE = 4      # stale clients recompute summaries (client-side)
+    INGEST = 5       # zero-latency batches land (degenerate sync path)
+    REFRESH = 6      # clustering refresher policy step
+    SELECT = 7       # selection reads the freshest complete snapshot
+    TRAIN = 8        # local SGD + aggregation + clock accounting
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Event:
+    round_idx: int
+    stage: Stage
+    seq: int
+    kind: str = dataclasses.field(compare=False, default="")
+    payload: Any = dataclasses.field(compare=False, default=None)
+
+
+class EventQueue:
+    """Priority queue over ``(round_idx, stage, seq)`` with deterministic
+    FIFO tie-breaking (``seq`` is assigned at push time)."""
+
+    def __init__(self):
+        self._heap: list[Event] = []
+        self._seq = 0
+        self.processed = 0
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def push(self, round_idx: int, stage: Stage, kind: str = "",
+             payload: Any = None) -> Event:
+        ev = Event(int(round_idx), Stage(stage), self._seq, kind, payload)
+        self._seq += 1
+        heapq.heappush(self._heap, ev)
+        return ev
+
+    def peek(self) -> Event | None:
+        return self._heap[0] if self._heap else None
+
+    def pop(self) -> Event:
+        self.processed += 1
+        return heapq.heappop(self._heap)
+
+    def run(self, handlers: dict[str, Callable[[Event], None]]) -> int:
+        """Pump events to exhaustion in deterministic order.  Unknown
+        kinds fail loudly — a silently dropped server event would
+        desynchronize the pipeline in ways no assertion downstream could
+        attribute."""
+        n = 0
+        while self._heap:
+            ev = self.pop()
+            try:
+                handler = handlers[ev.kind]
+            except KeyError:
+                raise KeyError(f"no handler for event kind {ev.kind!r} "
+                               f"at round {ev.round_idx} stage "
+                               f"{ev.stage.name}") from None
+            handler(ev)
+            n += 1
+        return n

@@ -1,0 +1,84 @@
+"""Summary-ingest queue (DESIGN.md §8).
+
+Client summary recomputation finishes *somewhere else* — on the device, a
+network round-trip away.  The async server models that with an explicit
+queue: a batch computed at round ``r`` becomes ready at round
+``r + delay`` and only then scatters into the live registry (the same
+O(M) ``RoundContext.ingest`` write the sync loop uses, against whichever
+registry backend — dict / streaming / sharded — is configured).
+
+Two invariants matter for the pipeline:
+
+  * **in-flight dedup** — a client whose refresh is already queued must
+    not be re-issued by the next round's drift scan (its registry row
+    still looks stale until the batch lands); ``in_flight`` feeds the
+    scan's exclusion set.
+  * **FIFO drain** — batches land in compute order, so a client refreshed
+    twice while latency accrues converges to its *newest* summary (later
+    batches overwrite earlier rows at drain time).
+
+With ``delay == 0`` the queue is transparent: batches drain in the same
+round they were computed, before clustering and selection — the
+degenerate setting the async ≡ sync differential pins.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SummaryBatch:
+    """One round's recomputed summaries, in ingest (registry write) order."""
+    compute_round: int                    # the data's age (last_refresh)
+    ready_round: int                      # when the batch may land
+    summaries: dict                       # {client: summary np.ndarray}
+    fresh_rows: dict                      # {client: cheap P(y) row}
+
+    def __len__(self) -> int:
+        return len(self.summaries)
+
+
+class IngestQueue:
+    """FIFO of in-flight summary batches, drained by readiness round."""
+
+    def __init__(self):
+        self._pending: list[SummaryBatch] = []
+        self.enqueued_batches = 0
+        self.drained_batches = 0
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    def enqueue(self, compute_round: int, delay_rounds: int,
+                summaries: dict, fresh) -> SummaryBatch | None:
+        """Queue one compute round's results; ``fresh`` is indexable by
+        client id (the round's [N, C] cheap-signal array).  Returns the
+        batch, or None when there is nothing to send."""
+        if not summaries:
+            return None
+        batch = SummaryBatch(
+            compute_round=int(compute_round),
+            ready_round=int(compute_round) + int(delay_rounds),
+            summaries=dict(summaries),
+            fresh_rows={c: np.asarray(fresh[c]) for c in summaries})
+        self._pending.append(batch)
+        self.enqueued_batches += 1
+        return batch
+
+    def pop_ready(self, round_idx: int) -> list[SummaryBatch]:
+        """All batches whose latency has elapsed, in enqueue (FIFO) order."""
+        ready = [b for b in self._pending if b.ready_round <= round_idx]
+        if ready:
+            self._pending = [b for b in self._pending
+                             if b.ready_round > round_idx]
+            self.drained_batches += len(ready)
+        return ready
+
+    def in_flight(self) -> set:
+        """Client ids with a queued-but-not-landed refresh (scan dedup)."""
+        ids: set = set()
+        for b in self._pending:
+            ids.update(b.summaries)
+        return ids

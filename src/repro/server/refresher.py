@@ -1,0 +1,155 @@
+"""Background clustering refresher (DESIGN.md §8).
+
+Clustering is the most expensive server-side stage (the paper's 360×
+complaint), and the async server's job is to keep it off the
+round-critical path.  The refresher owns the clustering rebuild cadence
+and the snapshot lineage; it runs in one of two modes:
+
+  * ``mode="sync"`` — the degenerate pin: rebuild exactly when the sync
+    loop would (``RoundContext.sync_recluster_due``) with exactly the sync
+    drifted set, blocking, and republish a fresh snapshot **every round**
+    so selection always reads live state.  This is the configuration the
+    differential harness proves bitwise-identical to ``server="sync"``.
+  * ``mode="staleness"`` — bounded-staleness pipelining: rebuilds are
+    triggered by accumulated *drift mass* (the fraction of the live fleet
+    whose rows were re-ingested or churned since the last snapshot) and
+    run in the background — the rebuilt snapshot goes live at the *next*
+    round's publish stage, so its cost overlaps training instead of
+    delaying selection.  Only when the selection snapshot's age would
+    exceed ``max_snapshot_age`` does the refresher rebuild *blocking*,
+    charging the cost to the critical path — the staleness bound is a
+    guarantee, not a hint.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.server.snapshot import RegistrySnapshot, SnapshotStore, capture
+
+
+@dataclasses.dataclass(frozen=True)
+class StalenessPolicy:
+    """Bounds for ``mode="staleness"``."""
+    max_snapshot_age: int = 3        # blocking rebuild at this age (rounds)
+    drift_mass_trigger: float = 0.05  # background rebuild at this fraction
+                                      # of the live fleet changed
+
+    def __post_init__(self):
+        if self.max_snapshot_age < 1:
+            raise ValueError("max_snapshot_age must be >= 1 (0 would make "
+                             "every round blocking — that is server='sync')")
+        if not 0.0 < self.drift_mass_trigger <= 1.0:
+            raise ValueError("drift_mass_trigger must be in (0, 1]")
+
+
+class ClusterRefresher:
+    """Owns clustering rebuilds + snapshot publication for the async
+    server.  All actual clustering work goes through the *shared*
+    ``RoundContext.recluster_now`` stage, so sync and async runs execute
+    identical math — only the cadence and the lane (blocking vs
+    background) differ."""
+
+    def __init__(self, ctx, store: SnapshotStore, mode: str,
+                 policy: StalenessPolicy | None = None):
+        if mode not in ("sync", "staleness"):
+            raise ValueError(f"unknown refresher mode: {mode}")
+        self.ctx = ctx
+        self.store = store
+        self.mode = mode
+        self.policy = policy or StalenessPolicy()
+        self._version = store.version
+        self._pending_ids: set[int] = set()   # rows changed since last build
+        self.blocking_builds = 0
+        self.background_builds = 0
+        self.background_s = 0.0               # wall seconds spent off-path
+        self.skipped_empty = 0                # rebuilds where clustering was
+                                              # skipped (registry still empty;
+                                              # the snapshot is captured anyway)
+
+    # ------------------------------------------------------------------
+    # write-side notifications (drift-mass bookkeeping)
+
+    def note_churn(self, plan) -> None:
+        for c in plan.joined:
+            self._pending_ids.add(int(c))
+        for c in plan.departed:
+            self._pending_ids.add(int(c))
+
+    def note_ingested(self, ids) -> None:
+        for c in ids:
+            self._pending_ids.add(int(c))
+
+    # ------------------------------------------------------------------
+
+    def _build(self, rnd: int, plan, drift_mass: float,
+               drifted: np.ndarray) -> tuple[RegistrySnapshot, float]:
+        """One clustering rebuild + snapshot capture.  When the registry
+        holds no live rows yet (all summaries still in flight), clustering
+        is skipped — zero rows would park centroids on the origin — but a
+        fresh snapshot of the *empty* view is still captured, so the
+        staleness clock resets: the age bound is a hard guarantee even
+        before the first batch lands."""
+        if self.ctx.registry.has_mask().any():
+            dt = self.ctx.recluster_now(rnd, plan.active, drifted)
+        else:
+            self.skipped_empty += 1
+            dt = 0.0
+        self._version += 1
+        snap = capture(self._version, rnd, self.ctx.registry,
+                       self.ctx.assignment, self.ctx.num_clusters,
+                       drift_mass=drift_mass)
+        self._pending_ids.clear()
+        return snap, dt
+
+    def step(self, rnd: int, plan, stale: list[int]
+             ) -> tuple[float, RegistrySnapshot | None]:
+        """One refresh-policy decision, after this round's drains.
+
+        Returns ``(blocking_seconds, background_snapshot)`` — blocking
+        seconds land on the round-critical path; a background snapshot
+        must be published by the caller at the *next* round's publish
+        stage (its build cost overlaps training).
+        """
+        ctx = self.ctx
+        if not ctx.uses_summaries:
+            return 0.0, None
+
+        if self.mode == "sync":
+            blocking = 0.0
+            # nonzero ingest latency can leave the registry empty on the
+            # early rounds even though the sync cadence says "recluster"
+            # — there is nothing to fit yet, so skip (the sync loop never
+            # hits this: its ingest always lands before the cadence check)
+            if (ctx.sync_recluster_due(rnd, plan, stale)
+                    and ctx.registry.has_mask().any()):
+                blocking = ctx.recluster_now(rnd, plan.active,
+                                             ctx.sync_drifted(plan, stale))
+                self.blocking_builds += 1
+            # republish every round: selection must read exactly the live
+            # registry/clustering state, as the sync loop does
+            self._version += 1
+            self.store.publish(capture(self._version, rnd, ctx.registry,
+                                       ctx.assignment, ctx.num_clusters))
+            self._pending_ids.clear()
+            return blocking, None
+
+        # --- bounded-staleness pipelining ---
+        live = max(int(plan.active.sum()), 1)
+        mass = len(self._pending_ids) / live
+        drifted = np.asarray(sorted(self._pending_ids), np.int64)
+        age = self.store.latest().age(rnd)
+        if age >= self.policy.max_snapshot_age:
+            # the bound would be violated at selection: rebuild NOW, on
+            # the critical path — staleness is guaranteed, not best-effort
+            snap, dt = self._build(rnd, plan, mass, drifted)
+            self.store.publish(snap)
+            self.blocking_builds += 1
+            return dt, None
+        if mass >= self.policy.drift_mass_trigger:
+            snap, dt = self._build(rnd, plan, mass, drifted)
+            self.background_builds += 1
+            self.background_s += dt
+            return 0.0, snap
+        return 0.0, None

@@ -1,0 +1,88 @@
+"""Versioned immutable registry snapshots (DESIGN.md §8).
+
+The async server separates the registry's *write side* (summary-ingest
+scatters, churn evictions) from the *read side* (selection).  Selection
+must see a **consistent** view — an assignment vector from one clustering
+fit paired with the has-summary mask that fit saw — even while ingest is
+already writing the next version underneath.  A ``RegistrySnapshot`` is
+that view: a frozen, read-only copy of everything selection consumes,
+stamped with a monotonically increasing version and the round whose server
+state it reflects.
+
+``SnapshotStore.publish`` is the single atomic swap point: the freshest
+complete snapshot is replaced by rebinding one reference (atomic in
+CPython, and the moral equivalent of an RCU pointer swap in a real
+deployment).  Readers never block writers and never observe a
+half-written view; staleness is bounded by the refresher's policy, not by
+locking.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+def _frozen(a: np.ndarray) -> np.ndarray:
+    """A read-only copy — snapshot fields must never alias live server
+    state (the maintainer mutates its assignment vector in place)."""
+    out = np.array(a, copy=True)
+    out.setflags(write=False)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class RegistrySnapshot:
+    """Everything selection reads, as one immutable versioned record."""
+    version: int
+    round_idx: int            # round whose server state this reflects
+    registry_version: int     # registry write-version at capture time
+    assignment: np.ndarray    # [N] int64 cluster ids (read-only)
+    num_clusters: int
+    has_mask: np.ndarray      # [N] bool: clients with a summary (read-only)
+    drift_mass: float = 0.0   # fraction of the live fleet re-ingested or
+                              # churned between the previous snapshot and
+                              # this one (staleness-policy bookkeeping)
+
+    def age(self, round_idx: int) -> int:
+        """Snapshot staleness in rounds at selection time."""
+        return int(round_idx) - self.round_idx
+
+
+def capture(version: int, round_idx: int, registry, assignment: np.ndarray,
+            num_clusters: int, drift_mass: float = 0.0) -> RegistrySnapshot:
+    """Build a snapshot from live server state (copies, then freezes)."""
+    return RegistrySnapshot(
+        version=int(version), round_idx=int(round_idx),
+        registry_version=int(getattr(registry, "version", 0)),
+        assignment=_frozen(np.asarray(assignment, np.int64)),
+        num_clusters=int(num_clusters),
+        has_mask=_frozen(np.asarray(registry.has_mask(), bool)),
+        drift_mass=float(drift_mass))
+
+
+class SnapshotStore:
+    """Holds the freshest complete snapshot; publish is an atomic swap."""
+
+    def __init__(self, initial: RegistrySnapshot):
+        self._latest = initial
+        self.published = 0
+
+    @property
+    def version(self) -> int:
+        return self._latest.version
+
+    def latest(self) -> RegistrySnapshot:
+        """The freshest complete snapshot — never None, never partial."""
+        return self._latest
+
+    def publish(self, snap: RegistrySnapshot) -> None:
+        """Atomically swap in a newer snapshot.  Versions must strictly
+        increase: publishing an equal/older version means two refreshers
+        raced or a background build was double-published — fail loudly."""
+        if snap.version <= self._latest.version:
+            raise ValueError(
+                f"snapshot version must increase: got v{snap.version} "
+                f"after v{self._latest.version}")
+        self._latest = snap
+        self.published += 1

@@ -34,6 +34,10 @@ class StreamingSummaryRegistry:
         self.policy = policy
         self.num_clients = num_clients
         self.refresh_count = 0
+        # write-version: bumped on every mutation so the async server's
+        # snapshots can record which registry state they captured
+        # (repro.server.snapshot, DESIGN.md §8)
+        self.version = 0
         self.last_refresh = np.full(num_clients, -(10 ** 9), np.int64)
         self.has_summary = np.zeros(num_clients, bool)
         # matrices allocate lazily on first update when dims aren't known
@@ -115,6 +119,7 @@ class StreamingSummaryRegistry:
         self.last_refresh[ids] = round_idx
         self.has_summary[ids] = True
         self.refresh_count += ids.size
+        self.version += 1
 
     def update(self, client: int, round_idx: int, summary: np.ndarray,
                label_dist: np.ndarray) -> None:
@@ -127,6 +132,7 @@ class StreamingSummaryRegistry:
         the stale-row selection bug ``tests/test_stream.py`` pins."""
         self.has_summary[client] = False
         self.last_refresh[client] = -(10 ** 9)
+        self.version += 1
         if self.summaries is not None:
             self.summaries[client] = 0.0
         if self.label_dists is not None:

@@ -1,0 +1,179 @@
+"""Dedicated edge-case coverage for ``core/coreset.py`` and
+``core/dbscan.py`` — both were previously exercised only through the
+summary/clustering integration paths.  Degenerate coreset budgets (k=0,
+k > n_valid, empty/single-class data) and degenerate DBSCAN regimes
+(all-noise, singleton, border adoption, one dense blob) are pinned here.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.coreset import class_quotas, coreset_indices
+from repro.core.dbscan import dbscan
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# coreset: largest-remainder class quotas
+
+
+def test_quotas_zero_budget():
+    labels = jnp.asarray([0, 1, 1, 2])
+    valid = jnp.ones(4, bool)
+    q = np.asarray(class_quotas(labels, valid, 3, 0))
+    assert q.sum() == 0 and (q == 0).all()
+
+
+def test_quotas_capped_by_class_counts_when_budget_exceeds_data():
+    labels = jnp.asarray([0, 0, 2])
+    valid = jnp.ones(3, bool)
+    q = np.asarray(class_quotas(labels, valid, 4, 10))
+    # cannot hand out more than each class holds
+    np.testing.assert_array_equal(q, [2, 0, 1, 0])
+
+
+def test_quotas_all_invalid_rows():
+    labels = jnp.asarray([0, 1, 2])
+    valid = jnp.zeros(3, bool)
+    q = np.asarray(class_quotas(labels, valid, 3, 2))
+    assert (q == 0).all()
+
+
+def test_quotas_preserve_label_proportions():
+    # paper §4.1: "maintaining its original label proportions"
+    labels = jnp.asarray([0] * 8 + [1] * 4)
+    valid = jnp.ones(12, bool)
+    q = np.asarray(class_quotas(labels, valid, 2, 6))
+    np.testing.assert_array_equal(q, [4, 2])
+    assert q.sum() == 6
+
+
+def test_quotas_single_class_takes_whole_budget():
+    labels = jnp.zeros(10, jnp.int32)
+    valid = jnp.ones(10, bool)
+    q = np.asarray(class_quotas(labels, valid, 5, 4))
+    np.testing.assert_array_equal(q, [4, 0, 0, 0, 0])
+
+
+# ---------------------------------------------------------------------------
+# coreset: index sampling
+
+
+def test_coreset_k_larger_than_valid_keeps_everything_once():
+    labels = jnp.asarray([0, 1, 1, 0, 2])
+    valid = jnp.asarray([True, True, False, True, True])
+    idx, keep = coreset_indices(labels, valid, 3, 8, KEY)
+    idx, keep = np.asarray(idx), np.asarray(keep)
+    assert keep.sum() == 4                      # every valid sample kept
+    kept = np.sort(idx[keep])
+    np.testing.assert_array_equal(kept, [0, 1, 3, 4])   # each exactly once
+    assert not keep[4:].any()                   # trailing slots padded out
+    assert (idx[~keep] == 0).all()              # padding repeats index 0
+
+
+def test_coreset_all_invalid_yields_empty_mask():
+    labels = jnp.asarray([0, 1, 2, 1])
+    valid = jnp.zeros(4, bool)
+    idx, keep = coreset_indices(labels, valid, 3, 3, KEY)
+    assert not np.asarray(keep).any()
+    assert (np.asarray(idx) == 0).all()
+
+
+def test_coreset_respects_quotas_and_validity():
+    rs = np.random.RandomState(3)
+    labels = jnp.asarray(rs.randint(0, 4, 64))
+    valid = jnp.asarray(rs.rand(64) > 0.3)
+    k = 16
+    idx, keep = coreset_indices(labels, valid, 4, k, KEY)
+    idx, keep = np.asarray(idx), np.asarray(keep)
+    quotas = np.asarray(class_quotas(labels, valid, 4, k))
+    assert keep.sum() == quotas.sum()
+    kept = idx[keep]
+    assert len(set(kept.tolist())) == kept.size          # no duplicates
+    assert np.asarray(valid)[kept].all()                 # only valid rows
+    # per-class sampled counts == quotas exactly
+    counts = np.bincount(np.asarray(labels)[kept], minlength=4)
+    np.testing.assert_array_equal(counts, quotas)
+
+
+def test_coreset_singleton_dataset():
+    labels = jnp.asarray([2])
+    valid = jnp.ones(1, bool)
+    idx, keep = coreset_indices(labels, valid, 3, 4, KEY)
+    assert np.asarray(keep).sum() == 1
+    assert int(np.asarray(idx)[np.asarray(keep)][0]) == 0
+
+
+# ---------------------------------------------------------------------------
+# DBSCAN: degenerate density regimes
+
+
+def test_dbscan_all_noise_when_eps_tiny():
+    x = jnp.asarray(np.random.RandomState(0).rand(12, 3) * 100.0)
+    res = dbscan(x, eps=1e-6, min_samples=2)
+    assert int(res.num_clusters) == 0
+    assert (np.asarray(res.labels) == -1).all()
+    assert not np.asarray(res.core_mask).any()
+
+
+def test_dbscan_one_dense_blob_is_one_cluster():
+    rs = np.random.RandomState(1)
+    x = jnp.asarray(rs.normal(0, 0.01, (20, 2)))
+    res = dbscan(x, eps=1.0, min_samples=3)
+    assert int(res.num_clusters) == 1
+    assert (np.asarray(res.labels) == 0).all()
+    assert np.asarray(res.core_mask).all()
+
+
+def test_dbscan_two_blobs_plus_noise_point():
+    rs = np.random.RandomState(2)
+    a = rs.normal(0, 0.05, (8, 2))
+    b = rs.normal(10, 0.05, (8, 2))
+    lone = np.asarray([[100.0, 100.0]])
+    x = jnp.asarray(np.concatenate([a, b, lone]))
+    res = dbscan(x, eps=0.5, min_samples=3)
+    labels = np.asarray(res.labels)
+    assert int(res.num_clusters) == 2
+    assert len(set(labels[:8].tolist())) == 1            # blob a coherent
+    assert len(set(labels[8:16].tolist())) == 1          # blob b coherent
+    assert labels[0] != labels[8]                        # distinct clusters
+    assert labels[16] == -1                              # the lone point
+    assert not bool(res.core_mask[16])
+
+
+def test_dbscan_border_point_adopts_core_cluster():
+    # 3 core points in a tight clump + 1 border point within eps of a core
+    # but with too few neighbors to be core itself
+    x = jnp.asarray([[0.0, 0.0], [0.1, 0.0], [0.0, 0.1], [0.9, 0.0]])
+    res = dbscan(x, eps=1.0, min_samples=4)
+    # every point has all 4 within eps=1.0?  no: the border point is 0.9
+    # from the origin but > 1.0 from [0, 0.1]'s diagonal?  distances:
+    # [0.9,0] to [0,0]=0.9, to [0.1,0]=0.8, to [0,0.1]≈0.906 — all <= 1.0,
+    # so shrink eps to isolate it: use eps=0.85 (reaches [0.1,0] only)
+    res = dbscan(x, eps=0.85, min_samples=3)
+    labels = np.asarray(res.labels)
+    core = np.asarray(res.core_mask)
+    np.testing.assert_array_equal(core, [True, True, True, False])
+    assert labels[3] == labels[1]                        # adopted, not noise
+    assert int(res.num_clusters) == 1
+
+
+def test_dbscan_min_samples_one_makes_singletons_core():
+    x = jnp.asarray([[0.0], [10.0], [20.0]])
+    res = dbscan(x, eps=1.0, min_samples=1)
+    labels = np.asarray(res.labels)
+    assert np.asarray(res.core_mask).all()
+    assert int(res.num_clusters) == 3
+    assert sorted(labels.tolist()) == [0, 1, 2]
+
+
+def test_dbscan_singleton_dataset():
+    x = jnp.asarray([[1.0, 2.0]])
+    res = dbscan(x, eps=0.5, min_samples=1)
+    assert int(res.num_clusters) == 1
+    assert int(res.labels[0]) == 0
+    res = dbscan(x, eps=0.5, min_samples=2)
+    assert int(res.num_clusters) == 0
+    assert int(res.labels[0]) == -1

@@ -8,7 +8,10 @@ churn (clients appearing/disappearing between rounds).
     ``timed_summary`` path (same bucket padding, same PRNG keys);
   * end-to-end: swapping registry (dict vs streaming) or engine (batched vs
     perclient) leaves the round loop's selection/refresh/accuracy traces
-    identical under a churn scenario.
+    identical under a churn scenario;
+  * the async selection server (``server="async"``, zero ingest latency,
+    sync refresh cadence — DESIGN.md §8) replays the sync trace bitwise
+    for every registry backend (24-seed matrix in ``tests/test_server.py``).
 """
 import jax
 import numpy as np
@@ -203,6 +206,24 @@ def test_batched_engine_e2e_equals_perclient_under_churn(churn_setup):
     h_per = run_federated(data, _churn_cfg(summary_engine="perclient"),
                           scenario=Scenario.from_config(sc_config))
     assert _trace(h_batched) == _trace(h_per)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("registry", ["dict", "streaming", "sharded"])
+def test_async_server_e2e_equals_sync_under_churn(churn_setup, registry):
+    """The async selection server (zero ingest latency, sync refresh
+    cadence — DESIGN.md §8) replays the sync trace bitwise under churn,
+    for every registry backend.  ``tests/test_server.py`` extends this
+    pin across 24 seeds and the clustering matrix."""
+    data, sc_config = churn_setup
+    kw = {"shard_chunk_rows": 8} if registry == "sharded" else {}
+    h_sync = run_federated(data, _churn_cfg(registry=registry, **kw),
+                           scenario=Scenario.from_config(sc_config))
+    h_async = run_federated(data,
+                            _churn_cfg(registry=registry, server="async",
+                                       **kw),
+                            scenario=Scenario.from_config(sc_config))
+    assert _trace(h_sync) == _trace(h_async)
 
 
 @pytest.mark.slow

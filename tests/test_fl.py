@@ -136,3 +136,23 @@ def test_summary_refresh_reacts_to_drift():
     after = h["refreshes"][-1]
     assert before == 12            # initial summaries only
     assert after > before          # drift forced re-summarization
+
+
+# ---------------------------------------------------------------------------
+# config validation: unknown backend strings must fail loudly (regression —
+# PR 4 covered clustering=, this pins registry= / summary_engine= / server=
+# too; repro.server config strings are pinned in tests/test_server.py)
+
+
+@pytest.mark.parametrize("field,value,msg", [
+    ("registry", "redis", "unknown registry"),
+    ("summary_engine", "turbo", "unknown summary_engine"),
+    ("clustering", "louvain", "unknown clustering"),
+    ("server", "threads", "unknown server"),
+])
+def test_unknown_backend_strings_rejected(field, value, msg):
+    data = FederatedDataset(small_spec(num_clients=6, num_classes=3, side=8,
+                                       avg_samples=12), seed=0)
+    cfg = FLConfig(rounds=1, **{field: value})
+    with pytest.raises(ValueError, match=msg):
+        run_federated(data, cfg)
