@@ -28,7 +28,8 @@ import json
 import statistics
 import sys
 
-DEFAULT_GROUPS = ("summary", "clustering", "sharded", "server")
+DEFAULT_GROUPS = ("summary", "clustering", "sharded", "server",
+                  "server_resume")
 
 
 def group_medians(report: dict, groups: tuple[str, ...]) -> dict[str, float]:

@@ -11,6 +11,8 @@ Prints ``name,us_per_call,derived`` CSV lines:
   * bench_shard       — §7 sharded pipeline at 100k–1M clients
   * bench_server      — §8 async server: critical-path overhead sync vs
                         async at fleet scale
+  * bench_resume      — §9 durability: checkpoint save/load, event-log
+                        append, and kill+resume overhead
   * bench_dryrun      — §Roofline table from dry-run artifacts (if present)
 
 and mirrors every CSV record into a machine-readable ``BENCH.json``
@@ -36,6 +38,7 @@ from benchmarks import (
     bench_compression,
     bench_dryrun,
     bench_kernels,
+    bench_resume,
     bench_selection,
     bench_server,
     bench_shard,
@@ -51,6 +54,7 @@ BENCHES = (
     ("pipeline", bench_summary_pipeline.main),
     ("shard", bench_shard.main),
     ("server", bench_server.main),
+    ("resume", bench_resume.main),
     ("compression", bench_compression.main),
     ("dryrun", bench_dryrun.main),
 )
@@ -108,16 +112,23 @@ def main(argv=None) -> None:
                    help="skip writing the JSON mirror")
     args = p.parse_args(argv)
     only = set(filter(None, args.only.split(",")))
+    valid = {name for name, _ in BENCHES}
+    unknown = only - valid
+    if unknown:
+        raise ValueError(
+            f"unknown bench group(s) {sorted(unknown)}; "
+            f"valid groups: {sorted(valid)}")
 
     from repro.sim import PRESET_NAMES
 
     print("name,us_per_call,derived")
     failures = []
-    # schema 4: adds the async-server bench — server/* records with
-    # critical_s / background_s / mean_age / speedup derived fields (the
-    # sync-vs-async critical-path claim, gated in CI) — on top of schema
-    # 3's sharded records and schema 2's scenario sweep
-    report: dict = {"schema": 4, "full": bool(args.full),
+    # schema 5: adds the durability bench — server_resume/* records
+    # (checkpoint save/load at fleet scale, log-append cost, end-to-end
+    # kill+resume overhead, gated in CI) — on top of schema 4's async
+    # server records, schema 3's sharded records and schema 2's scenario
+    # sweep
+    report: dict = {"schema": 5, "full": bool(args.full),
                     "seed": int(args.seed),
                     "scenario_presets": list(PRESET_NAMES), "benches": {}}
     for name, fn in BENCHES:

@@ -1,5 +1,25 @@
 from repro.checkpoint.checkpoint import (  # noqa: F401
     load_checkpoint,
+    load_state,
     restore_like,
     save_checkpoint,
+    save_state,
+)
+from repro.checkpoint.durable import (  # noqa: F401
+    Durability,
+    DurableSession,
+    EventLog,
+    read_log,
+)
+from repro.checkpoint.server_state import (  # noqa: F401
+    context_state,
+    maintainer_state,
+    registry_state,
+    restore_context,
+    restore_maintainer,
+    restore_registry,
+    restore_server,
+    restore_snapshot,
+    server_state,
+    snapshot_state,
 )

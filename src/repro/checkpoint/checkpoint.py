@@ -51,3 +51,84 @@ def restore_like(reference, loaded) -> object:
     cast = [np.asarray(g, dtype=r.dtype).reshape(r.shape)
             for r, g in zip(ref_leaves, got_leaves)]
     return jax.tree.unflatten(treedef, cast)
+
+
+# ---------------------------------------------------------------------------
+# mixed-tree state checkpoints (DESIGN.md §9)
+#
+# ``save_checkpoint`` above handles pure dict-of-array pytrees (model
+# params).  Server state is messier: nested dicts AND lists whose leaves mix
+# ndarrays with scalars, strings and None (registry counters, event-queue
+# records, RNG state).  ``save_state`` splits that tree: every array leaf
+# lands in one ``.npz`` under its "/"-joined path, and the structure —
+# with ``{"__array__": <key>}`` markers where arrays were — goes to a JSON
+# sidecar.  Both files are written to temp names and atomically renamed,
+# so a crash mid-write can never leave a half-written checkpoint that a
+# resume would silently load.
+
+_ARRAY_MARK = "__array__"
+
+
+def _state_paths(path: str) -> tuple[str, str]:
+    base = path[:-4] if path.endswith(".npz") else path
+    return base + ".npz", base + ".state.json"
+
+
+def _encode_state(node, key: str, arrays: dict):
+    if isinstance(node, dict):
+        out = {}
+        for k, v in node.items():
+            if not isinstance(k, str):
+                raise TypeError(f"state dict keys must be str, got {k!r} "
+                                f"at {key or '<root>'}")
+            out[k] = _encode_state(v, f"{key}/{k}" if key else k, arrays)
+        return out
+    if isinstance(node, (list, tuple)):
+        return [_encode_state(v, f"{key}/{i}" if key else str(i), arrays)
+                for i, v in enumerate(node)]
+    if isinstance(node, (np.ndarray, jax.Array)):
+        arrays[key] = np.asarray(jax.device_get(node))
+        return {_ARRAY_MARK: key}
+    if isinstance(node, np.generic):       # stray numpy scalar -> python
+        return node.item()
+    if node is None or isinstance(node, (bool, int, float, str)):
+        return node
+    raise TypeError(f"unsupported state leaf {type(node).__name__} "
+                    f"at {key or '<root>'}")
+
+
+def save_state(path: str, tree: dict) -> None:
+    """Durably persist a mixed nested state tree (atomic rename)."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    arrays: dict[str, np.ndarray] = {}
+    skeleton = _encode_state(tree, "", arrays)
+    npz_path, json_path = _state_paths(path)
+    tmp_npz, tmp_json = npz_path + ".tmp.npz", json_path + ".tmp"
+    # np.savez appends ".npz" when missing, hence the explicit suffix
+    np.savez(tmp_npz, **arrays)
+    with open(tmp_json, "w") as f:
+        json.dump(skeleton, f)            # allow_nan: inertia may be inf
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp_npz, npz_path)
+    os.replace(tmp_json, json_path)
+
+
+def _decode_state(node, npz):
+    if isinstance(node, dict):
+        if set(node) == {_ARRAY_MARK}:
+            return npz[node[_ARRAY_MARK]]
+        return {k: _decode_state(v, npz) for k, v in node.items()}
+    if isinstance(node, list):
+        return [_decode_state(v, npz) for v in node]
+    return node
+
+
+def load_state(path: str) -> dict:
+    """Inverse of ``save_state`` (arrays restored bitwise; tuples come
+    back as lists — JSON has no tuple type)."""
+    npz_path, json_path = _state_paths(path)
+    with open(json_path) as f:
+        skeleton = json.load(f)
+    with np.load(npz_path) as npz:
+        return _decode_state(skeleton, npz)

@@ -1,0 +1,178 @@
+"""Durable event log + round-boundary checkpoints (DESIGN.md §9).
+
+One federated run's durable footprint is a single directory:
+
+    <dir>/events.jsonl          append-only log, one JSON record per line
+    <dir>/ckpt_<round>.npz      round-boundary state (arrays)
+    <dir>/ckpt_<round>.state.json   ... and its structure/scalars
+
+Log record types (all carry ``"type"``):
+
+  * ``header``     — log schema + the full config and scenario config;
+                     a resume verifies these match before trusting a
+                     checkpoint (resuming under a different config would
+                     silently produce a different run);
+  * ``event``      — one committed server event ``(round, stage, seq,
+                     kind)``, appended *after* its handler ran: the log
+                     is the authoritative trace of what the server
+                     actually executed, in execution order;
+  * ``round``      — round lineage: selected clients, registry
+                     write-version and snapshot version at the round
+                     boundary;
+  * ``checkpoint`` — a durable state capture landed (its file base);
+  * ``resume``     — a process restarted and took over at ``round``.
+
+The log is flushed per append (optionally fsynced); a crash can at worst
+leave one torn final line, which ``read_log`` drops — matching what a
+real append-only log recovers to.  Checkpoints are written atomically
+(``checkpoint.save_state``), so the latest complete checkpoint plus the
+log suffix after it always reconstructs the run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+from repro.checkpoint.checkpoint import load_state, save_state
+
+LOG_NAME = "events.jsonl"
+LOG_SCHEMA = 1
+_CKPT_PREFIX = "ckpt_"
+
+
+@dataclasses.dataclass(frozen=True)
+class Durability:
+    """Where and how often a run persists itself."""
+    dir: str
+    checkpoint_every: int = 1      # rounds between state captures
+    fsync: bool = False            # fsync the log on every append
+
+    def __post_init__(self):
+        if self.checkpoint_every < 1:
+            raise ValueError("checkpoint_every must be >= 1")
+
+
+def read_log(path: str) -> list[dict]:
+    """Parse an append-only JSONL log, tolerating one torn final line
+    (the crash happened mid-append).  Corruption anywhere *else* is a
+    real integrity failure and raises."""
+    records = []
+    with open(path) as f:
+        lines = f.read().splitlines()
+    for i, line in enumerate(lines):
+        if not line.strip():
+            continue
+        try:
+            records.append(json.loads(line))
+        except json.JSONDecodeError:
+            if i == len(lines) - 1:
+                break                       # torn tail: drop it
+            raise ValueError(f"corrupt event log {path!r} at line {i + 1}")
+    return records
+
+
+def _normalize(obj):
+    """JSON round-trip normalization (tuples->lists etc.) so configs can
+    be compared structurally."""
+    return json.loads(json.dumps(obj))
+
+
+class EventLog:
+    """Append-only JSONL writer: flush per record, optional fsync."""
+
+    def __init__(self, path: str, fsync: bool = False):
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        self._f = open(path, "a")
+        self._fsync = fsync
+        self.appended = 0
+
+    def append(self, record: dict) -> None:
+        self._f.write(json.dumps(record, separators=(",", ":")) + "\n")
+        self._f.flush()
+        if self._fsync:
+            os.fsync(self._f.fileno())
+        self.appended += 1
+
+    def close(self) -> None:
+        self._f.close()
+
+
+class DurableSession:
+    """One run's durable lifecycle: verifies/writes the log header,
+    appends event/round records, and owns the checkpoint cadence."""
+
+    def __init__(self, durable: Durability, cfg_dict: dict,
+                 scenario_config: dict, resume: bool):
+        self.durable = durable
+        path = os.path.join(durable.dir, LOG_NAME)
+        header = {"type": "header", "log_schema": LOG_SCHEMA,
+                  "config": _normalize(cfg_dict),
+                  "scenario": _normalize(scenario_config)}
+        if resume:
+            if not os.path.exists(path):
+                raise FileNotFoundError(
+                    f"resume_from={durable.dir!r}: no event log at {path!r}")
+            self.records = read_log(path)
+            if not self.records or self.records[0].get("type") != "header":
+                raise ValueError(f"event log {path!r} has no header record")
+            prior = self.records[0]
+            for field in ("config", "scenario"):
+                if prior.get(field) != header[field]:
+                    raise ValueError(
+                        f"resume {field} mismatch: the durable run at "
+                        f"{durable.dir!r} was started with a different "
+                        f"{field} — resuming it would not reproduce the "
+                        f"original run")
+            self.log = EventLog(path, durable.fsync)
+        else:
+            self.records = []
+            self.log = EventLog(path, durable.fsync)
+            self.log.append(header)
+
+    # -- appends --------------------------------------------------------
+
+    def log_event(self, round_idx: int, stage: int, seq: int,
+                  kind: str) -> None:
+        self.log.append({"type": "event", "round": int(round_idx),
+                         "stage": int(stage), "seq": int(seq),
+                         "kind": kind})
+
+    def log_resume(self, start_round: int) -> None:
+        self.log.append({"type": "resume", "round": int(start_round)})
+
+    def commit_round(self, rnd: int, total_rounds: int, selected,
+                     registry_version: int, snapshot_version: int,
+                     state_fn) -> None:
+        """Append the round's lineage record and, when the cadence says
+        so, capture a durable checkpoint (``state_fn`` is only called —
+        and its cost only paid — on checkpoint rounds).  The final round
+        never checkpoints: there is nothing left to resume into."""
+        self.log.append({"type": "round", "round": int(rnd),
+                         "selected": [int(c) for c in selected],
+                         "registry_version": int(registry_version),
+                         "snapshot_version": int(snapshot_version)})
+        if (rnd + 1) % self.durable.checkpoint_every or rnd + 1 >= total_rounds:
+            return
+        base = f"{_CKPT_PREFIX}{rnd:06d}"
+        save_state(os.path.join(self.durable.dir, base), state_fn())
+        self.log.append({"type": "checkpoint", "round": int(rnd),
+                         "base": base})
+
+    # -- resume reads ---------------------------------------------------
+
+    def latest_checkpoint(self) -> tuple[int, dict] | None:
+        """The newest *complete* checkpoint named by the log, or None
+        (crash before the first capture ⇒ restart from round 0)."""
+        for rec in reversed(self.records):
+            if rec.get("type") != "checkpoint":
+                continue
+            base = os.path.join(self.durable.dir, rec["base"])
+            try:
+                return int(rec["round"]), load_state(base)
+            except FileNotFoundError:
+                continue       # log won the race against the rename pair
+        return None
+
+    def close(self) -> None:
+        self.log.close()

@@ -41,12 +41,15 @@ bit-identical to ``server="sync"`` (the async differential pins).
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint.durable import Durability, DurableSession
+from repro.checkpoint.server_state import context_state, restore_context
 from repro.core import (
     BatchedSummaryEngine, RefreshPolicy, SelectionConfig, SummaryRegistry,
     dbscan, kmeans, minibatch_kmeans, select_devices, sym_kl,
@@ -62,6 +65,8 @@ from repro.fl.models import make_classifier, xent_loss
 from repro.fl.system import SystemModel, SystemSpec, completion_times
 from repro.models.cnn import CNNConfig, build_cnn, cnn_apply
 from repro.optim import sgd
+from repro.server.events import Stage
+from repro.sim.faults import FaultInjector
 from repro.sim.scenario import RoundPlan
 
 
@@ -599,27 +604,97 @@ class RoundContext:
         return h
 
 
-def _drive_sync(ctx: RoundContext) -> dict:
-    """The sequential server: every stage on the round-critical path."""
+def _drive_sync(ctx: RoundContext, session=None, faults=None,
+                start_round: int = 0) -> dict:
+    """The sequential server: every stage on the round-critical path.
+
+    The stage boundaries mirror the async event schedule (same ``Stage``
+    ids), so a fault plan's crash points are portable between servers and
+    the durable log records the same trace either way.  A crash raises
+    *before* the stage runs — the interrupted stage was never committed.
+    """
     cfg = ctx.cfg
-    for rnd in range(cfg.rounds):
-        plan, fresh = ctx.begin_round(rnd)
-        stale = ctx.scan_stale(rnd, plan, fresh)
-        summaries, times, wall = ctx.compute_summaries(rnd, stale, plan.drift)
-        ctx.ingest(rnd, summaries, fresh)
-        if ctx.sync_recluster_due(rnd, plan, stale):
-            ctx.recluster_now(rnd, plan.active, ctx.sync_drifted(plan, stale))
-        sel = ctx.select(rnd, plan)
-        ctx.train_and_log(rnd, plan, fresh, sel, times, wall,
-                          critical_s=ctx.round_overhead_s(),
-                          snapshot_version=ctx.recluster_count,
-                          snapshot_age=0)
+    seq = 0
+
+    def step(rnd, stage, fn):
+        nonlocal seq
+        if faults is not None:
+            faults.maybe_crash(rnd, stage)
+        out = fn()
+        if session is not None:
+            session.log_event(rnd, int(stage), seq, stage.name.lower())
+        seq += 1
+        return out
+
+    for rnd in range(start_round, cfg.rounds):
+        plan, fresh = step(rnd, Stage.MEMBERSHIP,
+                           lambda: ctx.begin_round(rnd))
+        stale = step(rnd, Stage.SCAN,
+                     lambda: ctx.scan_stale(rnd, plan, fresh))
+        summaries, times, wall = step(
+            rnd, Stage.COMPUTE,
+            lambda: ctx.compute_summaries(rnd, stale, plan.drift))
+        step(rnd, Stage.INGEST, lambda: ctx.ingest(rnd, summaries, fresh))
+
+        def refresh():
+            if ctx.sync_recluster_due(rnd, plan, stale):
+                ctx.recluster_now(rnd, plan.active,
+                                  ctx.sync_drifted(plan, stale))
+        step(rnd, Stage.REFRESH, refresh)
+        sel = step(rnd, Stage.SELECT, lambda: ctx.select(rnd, plan))
+        step(rnd, Stage.TRAIN,
+             lambda: ctx.train_and_log(rnd, plan, fresh, sel, times, wall,
+                                       critical_s=ctx.round_overhead_s(),
+                                       snapshot_version=ctx.recluster_count,
+                                       snapshot_age=0))
+        if session is not None:
+            session.commit_round(
+                rnd, cfg.rounds, sel,
+                registry_version=getattr(ctx.registry, "version", 0),
+                snapshot_version=ctx.recluster_count,
+                state_fn=lambda: {"round": rnd,
+                                  "context": context_state(ctx)})
     return ctx.finish()
+
+
+def _replay_scenario(scenario, selected_per_round) -> None:
+    """Re-derive scenario-internal state (RNG walk, battery drain) for the
+    completed rounds.  Scenarios are pure functions of (config, round
+    sequence, selections) with a fixed per-round draw count, so replaying
+    ``round_plan`` + ``note_selected`` reproduces their state exactly —
+    no scenario state ever needs checkpointing."""
+    scenario.reset()
+    for rnd, sel in enumerate(selected_per_round):
+        scenario.round_plan(rnd)
+        scenario.note_selected(np.asarray(sel, np.int64))
+
+
+def _as_durability(durable) -> Durability:
+    return durable if isinstance(durable, Durability) else \
+        Durability(dir=str(durable))
 
 
 def run_federated(data: FederatedDataset, cfg: FLConfig,
                   system_spec: SystemSpec | None = None,
-                  scenario=None) -> dict:
+                  scenario=None, *, durable=None, resume_from: str | None =
+                  None, faults=None) -> dict:
+    """Run one federated training.
+
+    Fault-tolerance knobs (DESIGN.md §9):
+
+      * ``durable`` — a directory path or ``Durability``: append every
+        server event to ``<dir>/events.jsonl`` and capture resumable
+        state at round boundaries;
+      * ``resume_from`` — a durable directory from a previous (killed)
+        run: verify the config matches, reload the latest checkpoint,
+        replay the scenario, and continue — the completed run is bitwise
+        identical (decisions, snapshots, history trace) to one that was
+        never interrupted;
+      * ``faults`` — a ``FaultPlan`` / ``FaultInjector``: deterministic
+        crash injection at stage boundaries (raises ``ServerKilled``)
+        and, for the async server, seeded ingest-batch loss with bounded
+        retry/backoff.
+    """
     spec = data.spec
     if scenario is None:
         scenario = LegacySystemScenario(
@@ -635,9 +710,46 @@ def run_federated(data: FederatedDataset, cfg: FLConfig,
                 f"scenario models {scenario.num_clients} clients but the "
                 f"dataset has {spec.num_clients}")
         scenario.reset()
+
+    injector = None
+    if faults is not None:
+        injector = (faults if isinstance(faults, FaultInjector)
+                    else FaultInjector(faults))
+
     ctx = RoundContext(data, cfg, scenario)
-    if cfg.server == "async":
-        # imported lazily: repro.server imports this module's RoundContext
-        from repro.server.async_rounds import drive_async
-        return drive_async(ctx)
-    return _drive_sync(ctx)
+    session = None
+    start_round = 0
+    server_st = None
+    if resume_from is not None:
+        dur = _as_durability(durable if durable is not None else resume_from)
+        if os.path.abspath(dur.dir) != os.path.abspath(resume_from):
+            raise ValueError(
+                "resume_from and durable.dir must agree — a resumed run "
+                "keeps appending to the durable directory it resumes from")
+        session = DurableSession(dur, dataclasses.asdict(cfg),
+                                 scenario.to_config(), resume=True)
+        ckpt = session.latest_checkpoint()
+        if ckpt is not None:
+            rnd, state = ckpt
+            # scenario first (pure replay), then the checkpointed state
+            _replay_scenario(scenario, state["context"]["history"]["selected"])
+            restore_context(ctx, state["context"])
+            server_st = state.get("server")
+            start_round = rnd + 1
+        session.log_resume(start_round)
+    elif durable is not None:
+        session = DurableSession(_as_durability(durable),
+                                 dataclasses.asdict(cfg),
+                                 scenario.to_config(), resume=False)
+    try:
+        if cfg.server == "async":
+            # imported lazily: repro.server imports this module's
+            # RoundContext
+            from repro.server.async_rounds import drive_async
+            return drive_async(ctx, session=session, faults=injector,
+                               start_round=start_round, restored=server_st)
+        return _drive_sync(ctx, session=session, faults=injector,
+                           start_round=start_round)
+    finally:
+        if session is not None:
+            session.close()

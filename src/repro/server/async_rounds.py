@@ -36,25 +36,44 @@ registry × clustering backends.
 """
 from __future__ import annotations
 
+from repro.checkpoint.server_state import (
+    context_state, restore_server, server_state,
+)
 from repro.server.events import EventQueue, Stage
 from repro.server.ingest import IngestQueue
 from repro.server.refresher import ClusterRefresher, StalenessPolicy
 from repro.server.snapshot import SnapshotStore, capture
 
 
-def drive_async(ctx) -> dict:
-    """Run one federated training under the async selection server."""
+def drive_async(ctx, session=None, faults=None, start_round: int = 0,
+                restored: dict | None = None) -> dict:
+    """Run one federated training under the async selection server.
+
+    ``session`` (a ``checkpoint.DurableSession``) appends every committed
+    event to the durable log and captures checkpoints at TRAIN
+    boundaries — where the per-round pipeline state dict is empty and the
+    next round's events are already queued, so the event queue + ingest
+    queue + snapshot store + refresher serialize completely.  ``faults``
+    injects crashes at event boundaries (the event stays queued — it was
+    never committed) and seeded ingest-batch loss with bounded
+    retry/backoff.  ``restored`` (with ``start_round``) is the
+    ``server_state`` from a checkpoint: the queue resumes mid-pipeline
+    and re-executes the crashed round deterministically.
+    """
     cfg = ctx.cfg
-    queue = EventQueue()
-    ingest_q = IngestQueue()
-    # seed snapshot: the pre-training server state (no summaries, the
-    # all-zeros assignment the sync loop also starts from)
-    store = SnapshotStore(capture(0, -1, ctx.registry, ctx.assignment,
-                                  ctx.num_clusters))
-    refresher = ClusterRefresher(
-        ctx, store, mode=cfg.server_refresh,
-        policy=StalenessPolicy(max_snapshot_age=cfg.snapshot_max_age,
-                               drift_mass_trigger=cfg.drift_mass_trigger))
+    if restored is not None:
+        queue, ingest_q, store, refresher = restore_server(ctx, restored)
+    else:
+        queue = EventQueue()
+        ingest_q = IngestQueue()
+        # seed snapshot: the pre-training server state (no summaries, the
+        # all-zeros assignment the sync loop also starts from)
+        store = SnapshotStore(capture(0, -1, ctx.registry, ctx.assignment,
+                                      ctx.num_clusters))
+        refresher = ClusterRefresher(
+            ctx, store, mode=cfg.server_refresh,
+            policy=StalenessPolicy(max_snapshot_age=cfg.snapshot_max_age,
+                                   drift_mass_trigger=cfg.drift_mass_trigger))
     state: dict[int, dict] = {}   # per-round pipeline state, keyed by round
 
     def schedule_round(rnd: int) -> None:
@@ -78,6 +97,23 @@ def drive_async(ctx) -> dict:
 
     def on_drain(ev) -> None:
         for batch in ingest_q.pop_ready(ev.payload):
+            if faults is not None and faults.batch_lost():
+                # injected transport loss: redeliver with backoff until
+                # the retry budget runs out, then drop — the clients fall
+                # out of the in-flight dedup set and the next drift scan
+                # re-issues them (degradation, not failure)
+                faults.lost_batches += 1
+                if batch.retries < faults.plan.max_retries:
+                    redo = ingest_q.requeue(
+                        batch,
+                        ev.payload + faults.plan.retry_backoff_rounds)
+                    faults.retried_batches += 1
+                    if redo.ready_round < cfg.rounds:
+                        queue.push(redo.ready_round, Stage.DRAIN, "drain",
+                                   redo.ready_round)
+                else:
+                    faults.dropped_batches += 1
+                continue
             ctx.ingest(batch.compute_round, batch.summaries,
                        batch.fresh_rows)
             refresher.note_ingested(batch.summaries)
@@ -134,11 +170,35 @@ def drive_async(ctx) -> dict:
         if rnd + 1 < cfg.rounds:
             schedule_round(rnd + 1)
 
-    schedule_round(0)
+    if restored is None:
+        schedule_round(start_round)
+
+    before = None
+    if faults is not None:
+        def before(ev) -> None:
+            faults.maybe_crash(ev.round_idx, ev.stage)
+
+    after = None
+    if session is not None:
+        def after(ev) -> None:
+            session.log_event(ev.round_idx, int(ev.stage), ev.seq, ev.kind)
+            if ev.kind != "train":
+                return
+            rnd = ev.payload
+            session.commit_round(
+                rnd, cfg.rounds, ctx.history["selected"][-1],
+                registry_version=getattr(ctx.registry, "version", 0),
+                snapshot_version=store.version,
+                state_fn=lambda: {
+                    "round": rnd,
+                    "context": context_state(ctx),
+                    "server": server_state(queue, ingest_q, store,
+                                           refresher)})
+
     queue.run({"membership": on_membership, "publish": on_publish,
                "drain": on_drain, "scan": on_scan, "compute": on_compute,
                "refresh": on_refresh, "select": on_select,
-               "train": on_train})
+               "train": on_train}, before=before, after=after)
 
     history = ctx.finish()
     history["server"] = {
@@ -151,4 +211,6 @@ def drive_async(ctx) -> dict:
         "background_refreshes": refresher.background_builds,
         "background_s": refresher.background_s,
     }
+    if faults is not None:
+        history["server"]["faults"] = faults.counters()
     return history

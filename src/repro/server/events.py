@@ -72,13 +72,37 @@ class EventQueue:
         self.processed += 1
         return heapq.heappop(self._heap)
 
-    def run(self, handlers: dict[str, Callable[[Event], None]]) -> int:
+    def pending(self) -> list[Event]:
+        """Queued-but-unprocessed events in pop order (checkpointing)."""
+        return sorted(self._heap)
+
+    def load(self, events: list[Event], seq: int, processed: int) -> None:
+        """Restore a checkpointed queue: the pending events plus the push
+        counter (so future pushes keep the total order) and the processed
+        count (so resumed stats match an uninterrupted run)."""
+        self._heap = list(events)
+        heapq.heapify(self._heap)
+        self._seq = int(seq)
+        self.processed = int(processed)
+
+    def run(self, handlers: dict[str, Callable[[Event], None]],
+            before: Callable[[Event], None] | None = None,
+            after: Callable[[Event], None] | None = None) -> int:
         """Pump events to exhaustion in deterministic order.  Unknown
         kinds fail loudly — a silently dropped server event would
         desynchronize the pipeline in ways no assertion downstream could
-        attribute."""
+        attribute.
+
+        ``before`` runs at the event boundary, before the event is popped
+        — if it raises (fault injection), the event stays queued, exactly
+        like a process killed between two handler commits.  ``after``
+        runs once the handler returned (durable-log append / checkpoint
+        hooks): an event is only logged as executed when it finished.
+        """
         n = 0
         while self._heap:
+            if before is not None:
+                before(self._heap[0])
             ev = self.pop()
             try:
                 handler = handlers[ev.kind]
@@ -87,5 +111,7 @@ class EventQueue:
                                f"at round {ev.round_idx} stage "
                                f"{ev.stage.name}") from None
             handler(ev)
+            if after is not None:
+                after(ev)
             n += 1
         return n

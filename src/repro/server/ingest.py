@@ -35,6 +35,7 @@ class SummaryBatch:
     ready_round: int                      # when the batch may land
     summaries: dict                       # {client: summary np.ndarray}
     fresh_rows: dict                      # {client: cheap P(y) row}
+    retries: int = 0                      # redeliveries after injected loss
 
     def __len__(self) -> int:
         return len(self.summaries)
@@ -47,6 +48,7 @@ class IngestQueue:
         self._pending: list[SummaryBatch] = []
         self.enqueued_batches = 0
         self.drained_batches = 0
+        self.requeued_batches = 0
 
     def __len__(self) -> int:
         return len(self._pending)
@@ -76,9 +78,32 @@ class IngestQueue:
             self.drained_batches += len(ready)
         return ready
 
+    def requeue(self, batch: SummaryBatch, ready_round: int) -> SummaryBatch:
+        """Redeliver a lost batch (fault injection): same payload, one
+        more retry, ready after the backoff.  Appended at the tail — a
+        redelivery is a *later* arrival, so FIFO convergence to the
+        newest summary still holds."""
+        redo = dataclasses.replace(batch, ready_round=int(ready_round),
+                                   retries=batch.retries + 1)
+        self._pending.append(redo)
+        self.requeued_batches += 1
+        return redo
+
     def in_flight(self) -> set:
         """Client ids with a queued-but-not-landed refresh (scan dedup)."""
         ids: set = set()
         for b in self._pending:
             ids.update(b.summaries)
         return ids
+
+    def pending(self) -> list[SummaryBatch]:
+        """In-flight batches in FIFO order (checkpointing)."""
+        return list(self._pending)
+
+    def load(self, batches: list[SummaryBatch], enqueued: int, drained: int,
+             requeued: int = 0) -> None:
+        """Restore a checkpointed queue (batches in FIFO order)."""
+        self._pending = list(batches)
+        self.enqueued_batches = int(enqueued)
+        self.drained_batches = int(drained)
+        self.requeued_batches = int(requeued)

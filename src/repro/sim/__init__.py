@@ -2,6 +2,12 @@
 replayable heterogeneity scenarios (availability, churn, deadlines, label
 drift), and named presets swept by benchmarks and the differential test
 harness."""
+from repro.sim.faults import (  # noqa: F401
+    FaultInjector,
+    FaultPlan,
+    ServerKilled,
+    resume_trace,
+)
 from repro.sim.fleet import (  # noqa: F401
     FleetArenas,
     drift_fleet,

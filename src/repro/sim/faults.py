@@ -1,0 +1,138 @@
+"""Deterministic fault injection for the selection server (DESIGN.md §9).
+
+Two fault families, both seeded so every failure is replayable:
+
+  * **server crashes** — ``FaultInjector.maybe_crash`` raises
+    ``ServerKilled`` at a stage boundary, *before* that stage's handler
+    runs (the interrupted event was never committed, exactly like a
+    process killed between two log appends).  Crash points are either an
+    explicit ``(round, stage)`` list or a seeded Bernoulli schedule;
+    ``max_crashes`` bounds a single process's deaths so a kill-and-resume
+    chain terminates.
+  * **ingest-batch loss** — ``batch_lost`` models a summary batch lost in
+    transit.  The async drain requeues lost batches with a bounded
+    retry/backoff (``max_retries`` / ``retry_backoff_rounds``); a batch
+    that exhausts its retries is dropped, its clients fall out of the
+    in-flight dedup set, and the next drift scan re-issues them —
+    degradation, not failure.
+
+``resume_trace`` extracts the deterministic slice of a run history (the
+bitwise resume pin): wall-second meters are excluded — re-executing a
+round after a crash cannot reproduce wall time, only decisions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.server.events import Stage
+
+
+class ServerKilled(RuntimeError):
+    """An injected crash: the server process died at a stage boundary."""
+
+    def __init__(self, round_idx: int, stage: Stage):
+        self.round_idx = int(round_idx)
+        self.stage = Stage(stage)
+        super().__init__(f"injected server crash at round {self.round_idx} "
+                         f"before {self.stage.name}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A replayable fault schedule."""
+    crash_points: tuple = ()          # ((round, stage), ...) boundaries
+    crash_rate: float = 0.0           # Bernoulli crash per boundary
+    crash_seed: int = 0
+    max_crashes: int = 1              # per process lifetime
+    ingest_loss_rate: float = 0.0     # Bernoulli loss per drained batch
+    loss_seed: int = 0
+    max_retries: int = 3              # redeliveries before a batch drops
+    retry_backoff_rounds: int = 1     # extra latency per redelivery
+
+    def __post_init__(self):
+        if not 0.0 <= self.crash_rate <= 1.0:
+            raise ValueError("crash_rate must be in [0, 1]")
+        if not 0.0 <= self.ingest_loss_rate <= 1.0:
+            raise ValueError("ingest_loss_rate must be in [0, 1]")
+        if self.max_crashes < 0 or self.max_retries < 0:
+            raise ValueError("max_crashes/max_retries must be >= 0")
+        if self.retry_backoff_rounds < 1:
+            raise ValueError("retry_backoff_rounds must be >= 1 (a zero "
+                             "backoff would redeliver within the same "
+                             "drain and spin)")
+        for point in self.crash_points:
+            rnd, stage = point
+            if int(rnd) < 0:
+                raise ValueError(f"crash point {point!r}: negative round")
+            Stage(stage)               # raises on an unknown stage
+
+
+class FaultInjector:
+    """Runtime arm of a ``FaultPlan`` — owns the seeded draw streams and
+    the degradation counters one process accumulates."""
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self._points = {(int(r), Stage(s)) for r, s in plan.crash_points}
+        self._crash_rng = np.random.RandomState(plan.crash_seed)
+        self._loss_rng = np.random.RandomState(plan.loss_seed)
+        self.crashes = 0
+        self.lost_batches = 0
+        self.retried_batches = 0
+        self.dropped_batches = 0
+
+    def maybe_crash(self, round_idx: int, stage: Stage) -> None:
+        """Raise ``ServerKilled`` if this boundary is a planned crash
+        point (each explicit point fires at most once)."""
+        if self.crashes >= self.plan.max_crashes:
+            return
+        point = (int(round_idx), Stage(stage))
+        hit = point in self._points
+        if not hit and self.plan.crash_rate > 0.0:
+            hit = bool(self._crash_rng.rand() < self.plan.crash_rate)
+        if hit:
+            self._points.discard(point)
+            self.crashes += 1
+            raise ServerKilled(*point)
+
+    def batch_lost(self) -> bool:
+        """One seeded loss draw per drained batch delivery."""
+        if self.plan.ingest_loss_rate <= 0.0:
+            return False
+        return bool(self._loss_rng.rand() < self.plan.ingest_loss_rate)
+
+    def counters(self) -> dict:
+        return {"crashes": self.crashes,
+                "lost_batches": self.lost_batches,
+                "retried_batches": self.retried_batches,
+                "dropped_batches": self.dropped_batches}
+
+
+# ---------------------------------------------------------------------------
+# the resume pin
+
+
+RESUME_TRACE_KEYS = (
+    "round", "selected", "completed", "dropped", "refreshes", "acc",
+    "sim_time", "kl_coverage", "n_active", "n_joined", "n_departed",
+    "snapshot_version", "snapshot_age")
+
+
+def _canon(v):
+    if isinstance(v, list):
+        return [_canon(x) for x in v]
+    if isinstance(v, float) and math.isnan(v):
+        return "nan"                   # NaN != NaN breaks dict equality
+    return v
+
+
+def resume_trace(history: dict) -> dict:
+    """The deterministic slice of a run history — every decision,
+    snapshot-lineage and clock value a resumed run must replay bitwise.
+    Wall-second meters (``server_*_s``, ``wall_summary_s``,
+    ``overhead_critical_s``) are measured, not decided, and are excluded.
+    """
+    return {k: _canon(history[k]) for k in RESUME_TRACE_KEYS}

@@ -1,0 +1,49 @@
+"""Bench-harness CLI contract: ``--only`` typos must fail loudly.
+
+A CI job that runs ``--only server`` with a misspelled group used to
+silently run *zero* benches and exit green — the perf gate then failed
+one step later with a confusing "group missing from current run".  The
+harness now rejects unknown group names up front, listing the valid ones.
+"""
+import json
+import os
+
+import pytest
+
+from benchmarks import run as bench_run
+
+
+def test_only_unknown_group_fails():
+    with pytest.raises(ValueError, match="unknown bench group"):
+        bench_run.main(["--only", "serverr", "--no-json"])
+
+
+def test_only_unknown_group_lists_valid_names():
+    with pytest.raises(ValueError) as exc:
+        bench_run.main(["--only", "nope,alsono", "--no-json"])
+    msg = str(exc.value)
+    assert "'alsono'" in msg and "'nope'" in msg
+    for name, _ in bench_run.BENCHES:
+        assert name in msg
+
+
+def test_only_mixed_known_unknown_fails():
+    # one valid name must not mask the typo next to it
+    with pytest.raises(ValueError, match="unknown bench group"):
+        bench_run.main(["--only", "server,sever", "--no-json"])
+
+
+def test_only_known_group_runs(tmp_path, capsys):
+    out = os.path.join(str(tmp_path), "bench.json")
+    bench_run.main(["--only", "dryrun", "--json", out])
+    report = json.load(open(out))
+    assert report["schema"] == 5
+    assert list(report["benches"]) == ["dryrun"]
+    assert report["failures"] == []
+
+
+def test_resume_group_registered():
+    names = [name for name, _ in bench_run.BENCHES]
+    assert "resume" in names
+    from benchmarks.check_regression import DEFAULT_GROUPS
+    assert "server_resume" in DEFAULT_GROUPS

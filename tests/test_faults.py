@@ -1,0 +1,333 @@
+"""Fault-injection harness tests (DESIGN.md §9).
+
+  * property tests (hypothesis via the compat shim) for the event-queue
+    invariants the durable log leans on: ``(round, stage, seq)`` total
+    order, FIFO tie-break stability, and replay-from-log equivalence for
+    arbitrary push/pop interleavings;
+  * ``FaultInjector`` semantics: explicit crash points fire exactly once,
+    seeded schedules replay, retry budgets bound ingest-batch loss;
+  * crash-point fuzz: seeded sweeps that kill a run at N random event
+    boundaries per churn preset and assert the resumed history equals the
+    uninterrupted one (quick CI variant + ``slow`` full sweep).
+"""
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+
+from repro.data.synthetic import FederatedDataset, small_spec
+from repro.fl import FLConfig, run_federated
+from repro.server.events import Event, EventQueue, Stage
+from repro.server.ingest import IngestQueue
+from repro.sim import (
+    FaultInjector, FaultPlan, Scenario, ServerKilled, make_scenario,
+    resume_trace,
+)
+
+_PRESETS = ("mobile-churn", "straggler", "diurnal")
+_STAGES = {
+    "sync": (Stage.MEMBERSHIP, Stage.SCAN, Stage.COMPUTE, Stage.INGEST,
+             Stage.REFRESH, Stage.SELECT, Stage.TRAIN),
+    "async": (Stage.MEMBERSHIP, Stage.DRAIN, Stage.SCAN, Stage.COMPUTE,
+              Stage.REFRESH, Stage.SELECT, Stage.TRAIN),
+}
+
+
+# ---------------------------------------------------------------------------
+# event-queue invariants (property tests + seeded deterministic twins)
+
+
+def _random_ops(seed: int, n_ops: int):
+    """A seeded arbitrary interleaving of pushes and pops."""
+    rs = np.random.RandomState(seed)
+    ops = []
+    size = 0
+    for i in range(n_ops):
+        if size and rs.rand() < 0.4:
+            ops.append(None)                       # pop
+            size -= 1
+        else:
+            ops.append((int(rs.randint(0, 5)),     # round
+                        int(rs.randint(0, 9)),     # stage
+                        f"k{i}"))                  # kind (unique per push)
+            size += 1
+    return ops
+
+
+def _interleave(ops):
+    """Run ops against a queue; returns (queue, pushed, popped)."""
+    q = EventQueue()
+    pushed, popped = [], []
+    for op in ops:
+        if op is None:
+            popped.append(q.pop())
+        else:
+            rnd, stage, kind = op
+            pushed.append(q.push(rnd, Stage(stage), kind))
+    return q, pushed, popped
+
+
+def _check_queue_invariants(seed: int, n_ops: int) -> None:
+    ops = _random_ops(seed, n_ops)
+    q, pushed, popped = _interleave(ops)
+    drained = popped + [q.pop() for _ in range(len(q))]
+    assert len(drained) == len(pushed)
+
+    # (round, stage, seq) keys are unique — a *total* order, so two runs
+    # can never disagree on a tie
+    keys = [(e.round_idx, e.stage, e.seq) for e in drained]
+    assert len(set(keys)) == len(keys)
+
+    # FIFO tie-break: within equal (round, stage), events drain in push
+    # order (seq is monotone in push order)
+    by_push = {e.kind: i for i, e in enumerate(pushed)}
+    for group_key in {(e.round_idx, e.stage) for e in drained}:
+        group = [e for e in drained if (e.round_idx, e.stage) == group_key]
+        order = [by_push[e.kind] for e in group]
+        assert order == sorted(order)
+
+    # replay-from-log equivalence: re-pushing the recorded push sequence
+    # into a fresh queue drains the exact same (round, stage, kind) tape
+    q2 = EventQueue()
+    for e in pushed:
+        q2.push(e.round_idx, e.stage, e.kind)
+    replay = [q2.pop() for _ in range(len(q2))]
+    # the replay drains everything at once, so compare against the fully
+    # sorted original tape (pops interleaved with pushes can only see
+    # what was pushed so far)
+    full = sorted(drained)
+    assert ([(e.round_idx, e.stage, e.kind) for e in replay]
+            == [(e.round_idx, e.stage, e.kind) for e in full])
+
+
+@settings(deadline=None, max_examples=50)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 120))
+def test_queue_invariants_property(seed, n_ops):
+    _check_queue_invariants(seed, n_ops)
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_queue_invariants_seeded(seed):
+    """Deterministic twin of the property test (runs even where
+    hypothesis is not installed)."""
+    _check_queue_invariants(seed, 80)
+
+
+def _check_queue_checkpoint_roundtrip(seed: int, n_ops: int) -> None:
+    """Cutting a queue mid-interleaving, serializing pending() and
+    load()-ing into a fresh queue must preserve the remaining pop tape
+    AND the push counter (future pushes keep the total order)."""
+    ops = _random_ops(seed, n_ops)
+    q, _, _ = _interleave(ops)
+    q2 = EventQueue()
+    q2.load(list(q.pending()), seq=q._seq, processed=q.processed)
+    q2.push(0, Stage.TRAIN, "late")     # post-restore push ties break last
+    q.push(0, Stage.TRAIN, "late")
+    a = [q.pop() for _ in range(len(q))]
+    b = [q2.pop() for _ in range(len(q2))]
+    assert [(e.round_idx, e.stage, e.seq, e.kind) for e in a] \
+        == [(e.round_idx, e.stage, e.seq, e.kind) for e in b]
+    assert q.processed == q2.processed
+
+
+@settings(deadline=None, max_examples=50)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 120))
+def test_queue_checkpoint_roundtrip_property(seed, n_ops):
+    _check_queue_checkpoint_roundtrip(seed, n_ops)
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_queue_checkpoint_roundtrip_seeded(seed):
+    _check_queue_checkpoint_roundtrip(seed, 60)
+
+
+def test_queue_hooks_ordering():
+    """``before`` sees the event while it is still queued; a raising
+    ``before`` leaves it unconsumed (the crash-injection contract)."""
+    q = EventQueue()
+    q.push(0, Stage.SCAN, "scan", 0)
+    q.push(0, Stage.TRAIN, "train", 0)
+    seen = []
+
+    def boom(ev):
+        if ev.kind == "train":
+            raise ServerKilled(ev.round_idx, ev.stage)
+
+    with pytest.raises(ServerKilled):
+        q.run({"scan": lambda ev: seen.append(ev.kind),
+               "train": lambda ev: seen.append(ev.kind)}, before=boom)
+    assert seen == ["scan"]
+    assert len(q) == 1 and q.peek().kind == "train"   # never popped
+    # a fresh run without the fault finishes the tape
+    q.run({"train": lambda ev: seen.append(ev.kind)})
+    assert seen == ["scan", "train"]
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector semantics
+
+
+def test_explicit_crash_points_fire_once():
+    inj = FaultInjector(FaultPlan(crash_points=((1, Stage.SELECT),),
+                                  max_crashes=5))
+    inj.maybe_crash(0, Stage.SELECT)
+    inj.maybe_crash(1, Stage.SCAN)
+    with pytest.raises(ServerKilled) as e:
+        inj.maybe_crash(1, Stage.SELECT)
+    assert e.value.round_idx == 1 and e.value.stage == Stage.SELECT
+    inj.maybe_crash(1, Stage.SELECT)          # spent — no refire
+    assert inj.crashes == 1
+
+
+def test_max_crashes_bounds_process_deaths():
+    inj = FaultInjector(FaultPlan(crash_rate=1.0, max_crashes=2))
+    for _ in range(2):
+        with pytest.raises(ServerKilled):
+            inj.maybe_crash(0, Stage.SCAN)
+    inj.maybe_crash(0, Stage.SCAN)            # budget exhausted
+    assert inj.crashes == 2
+
+
+def test_seeded_schedule_replays():
+    draws = []
+    for _ in range(2):
+        inj = FaultInjector(FaultPlan(crash_rate=0.3, crash_seed=7,
+                                      max_crashes=100))
+        hits = []
+        for i in range(50):
+            try:
+                inj.maybe_crash(i, Stage.TRAIN)
+            except ServerKilled:
+                hits.append(i)
+        draws.append(hits)
+    assert draws[0] == draws[1] and draws[0], "seeded schedule must replay"
+
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError, match="crash_rate"):
+        FaultPlan(crash_rate=1.5)
+    with pytest.raises(ValueError, match="retry_backoff_rounds"):
+        FaultPlan(retry_backoff_rounds=0)
+    with pytest.raises(ValueError):
+        FaultPlan(crash_points=((0, 99),))    # unknown stage
+
+
+def test_ingest_requeue_is_fifo_tail():
+    q = IngestQueue()
+    b1 = q.enqueue(0, 1, {1: np.ones(4)}, {1: np.ones(3)})
+    b2 = q.enqueue(0, 1, {2: np.ones(4)}, {2: np.ones(3)})
+    redo = q.requeue(b1, ready_round=2)
+    assert redo.retries == 1 and redo.ready_round == 2
+    assert q.pending()[-1] is redo            # redelivery lands at the tail
+    assert q.in_flight() == {1, 2}
+    assert q.requeued_batches == 1
+    assert b2 in q.pop_ready(1) and redo not in q.pop_ready(1)
+
+
+# ---------------------------------------------------------------------------
+# injected ingest-batch loss: bounded retry/backoff, graceful degradation
+
+
+@pytest.fixture(scope="module")
+def fault_data():
+    return FederatedDataset(small_spec(num_clients=16, num_classes=5, side=8,
+                                       avg_samples=24), seed=13)
+
+
+def _cfg(seed, server="async", **kw):
+    base = dict(rounds=5, clients_per_round=4, local_steps=1, summary="py",
+                clustering="kmeans", num_clusters=3, refresh_max_age=3,
+                refresh_kl=0.05, recluster_every=2, eval_every=2, seed=seed,
+                server=server)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def test_ingest_loss_degrades_gracefully(fault_data):
+    """Every loss is either redelivered or dropped within the retry
+    budget; the run completes and reports its degradation."""
+    data = fault_data
+    sc = make_scenario("mobile-churn", 16, seed=8).to_config()
+    h = run_federated(data, _cfg(8), scenario=Scenario.from_config(sc),
+                      faults=FaultPlan(ingest_loss_rate=0.5, loss_seed=3,
+                                       max_retries=2,
+                                       retry_backoff_rounds=1))
+    f = h["server"]["faults"]
+    assert f["lost_batches"] > 0, "loss rate 0.5 over 5 rounds never fired"
+    assert f["lost_batches"] == f["retried_batches"] + f["dropped_batches"]
+    assert f["crashes"] == 0
+    assert len(h["round"]) == 5               # degraded, not dead
+
+
+def test_ingest_loss_total_drops_everything(fault_data):
+    """100% loss with a zero retry budget: no batch ever lands, the
+    registry stays empty, selection still runs every round."""
+    data = fault_data
+    sc = make_scenario("mobile-churn", 16, seed=9).to_config()
+    h = run_federated(data, _cfg(9), scenario=Scenario.from_config(sc),
+                      faults=FaultPlan(ingest_loss_rate=1.0,
+                                       max_retries=0))
+    f = h["server"]["faults"]
+    assert f["dropped_batches"] == f["lost_batches"] > 0
+    assert f["retried_batches"] == 0
+    assert h["refreshes"][-1] == 0            # nothing ever ingested
+    assert len(h["round"]) == 5
+
+
+def test_ingest_loss_is_seeded(fault_data):
+    data = fault_data
+    sc = make_scenario("diurnal", 16, seed=10).to_config()
+    plan = FaultPlan(ingest_loss_rate=0.4, loss_seed=11, max_retries=1)
+    runs = [run_federated(data, _cfg(10), scenario=Scenario.from_config(sc),
+                          faults=plan) for _ in range(2)]
+    assert resume_trace(runs[0]) == resume_trace(runs[1])
+    assert runs[0]["server"]["faults"] == runs[1]["server"]["faults"]
+
+
+# ---------------------------------------------------------------------------
+# crash-point fuzz: N random kills per preset, resumed ≡ uninterrupted
+
+
+def _fuzz_cell(data, seed, server, preset, n_kills, tmpdir, rounds=3):
+    """Kill a durable run at ``n_kills`` random boundaries (ascending,
+    so every kill fires) and assert the final trace matches."""
+    rs = np.random.RandomState(seed)
+    stages = _STAGES[server]
+    points = sorted({(int(rs.randint(0, rounds)),
+                      stages[int(rs.randint(0, len(stages)))])
+                     for _ in range(n_kills)})
+    sc = make_scenario(preset, data.spec.num_clients, seed=seed).to_config()
+    cfg = _cfg(seed, server=server, rounds=rounds)
+    h0 = run_federated(data, cfg, scenario=Scenario.from_config(sc))
+    resume, killed = False, 0
+    for point in points:
+        try:
+            h1 = run_federated(data, cfg,
+                               scenario=Scenario.from_config(sc),
+                               durable=None if resume else tmpdir,
+                               resume_from=tmpdir if resume else None,
+                               faults=FaultPlan(crash_points=(point,)))
+        except ServerKilled:
+            resume, killed = True, killed + 1
+            continue
+        break
+    else:
+        h1 = run_federated(data, cfg, scenario=Scenario.from_config(sc),
+                           resume_from=tmpdir)
+    assert killed == len(points), f"{killed}/{len(points)} kills fired"
+    assert resume_trace(h0) == resume_trace(h1)
+
+
+@pytest.mark.parametrize("server", ["sync", "async"])
+def test_crash_fuzz_quick(fault_data, server, tmp_path):
+    _fuzz_cell(fault_data, seed=12, server=server, preset="mobile-churn",
+               n_kills=3, tmpdir=str(tmp_path))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("server", ["sync", "async"])
+@pytest.mark.parametrize("preset", _PRESETS)
+@pytest.mark.parametrize("seed", range(4))
+def test_crash_fuzz_sweep(fault_data, seed, preset, server, tmp_path):
+    _fuzz_cell(fault_data, seed=100 + seed, server=server, preset=preset,
+               n_kills=5, tmpdir=str(tmp_path))
