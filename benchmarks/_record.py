@@ -1,0 +1,63 @@
+"""Shared BENCH record emission — the single place that knows the CSV
+line format and the BENCH schema version.
+
+Every bench prints ``name,us_per_call,derived`` records; ``run.py`` tees
+stdout, parses the records back (``parse_records``) and mirrors them into
+``BENCH.json`` for the CI perf gate (``check_regression``).  Before this
+module each bench hand-rolled the ``print(f"{name},{us:.0f},...")`` line;
+``emit`` replaces those so the format (and any future escaping rule)
+changes in exactly one place.
+
+``derived`` is a ``key=value;key=value`` string: CI and the regression
+gate parse it with ``dict(kv.split("=") for kv in derived.split(";"))``,
+so keys/values must not contain ``=`` or ``;`` — ``emit`` enforces that
+instead of letting a stray separator corrupt the record downstream.
+Free-form derived text (no ``=``) is allowed via ``text=`` for records
+nobody dict-parses.
+
+Schema history: **6** adds the ``obs/*`` overhead records and the
+``server/percentiles/*`` critical-path latency-distribution records
+(p50/p99/p999 from ``repro.obs`` histograms); 5 added ``server_resume/*``
+durability records; 4 the async ``server/*`` records; 3 ``sharded/*``;
+2 the scenario sweep.
+"""
+from __future__ import annotations
+
+SCHEMA_VERSION = 6
+
+
+def fmt_value(v) -> str:
+    """Terse default formatting for derived values.  Strings pass through
+    (callers keep full control of precision by pre-formatting); floats get
+    ``%.6g`` — compact and round-trippable through ``float()``."""
+    if isinstance(v, str):
+        return v
+    if isinstance(v, bool):
+        return str(v)
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)
+
+
+def derived_str(text: str = "", **fields) -> str:
+    """``key=value;key=value`` derived string (``text`` is prepended
+    verbatim as its own segment)."""
+    parts = [text] if text else []
+    for k, v in fields.items():
+        s = fmt_value(v)
+        if "=" in k or ";" in k or "=" in s or ";" in s:
+            raise ValueError(f"derived field {k}={s!r} contains a "
+                             f"separator — it would corrupt the record")
+        parts.append(f"{k}={s}")
+    return ";".join(parts)
+
+
+def emit(name: str, us: float = 0.0, text: str = "", **fields) -> None:
+    """Print one BENCH CSV record.
+
+    ``us`` is the per-call latency in microseconds (0 for records that
+    only carry derived values); ``fields`` become the derived string.
+    """
+    if "," in name or "\n" in name:
+        raise ValueError(f"record name {name!r} contains a separator")
+    print(f"{name},{us:.2f},{derived_str(text, **fields)}")

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks._record import emit
 from repro.core import dbscan, kmeans, minibatch_kmeans
 from repro.stream import OnlineClusterMaintainer, OnlinePolicy
 
@@ -166,32 +167,32 @@ def main(fast: bool = True):
     rows = run(scales=scales)
     by = {}
     for r in rows:
-        print(f"{r['name']},{r['seconds'] * 1e6:.0f},"
-              f"n={r['n']};dim={r['dim']};clusters={r['clusters']}")
+        emit(r["name"], us=r["seconds"] * 1e6, n=r["n"], dim=r["dim"],
+             clusters=r["clusters"])
         by[(r["pipeline"], r["dataset"])] = r
     for d in ("femnist", "openimage"):
         a = by.get(("dbscan-pxy", d))
         b = by.get(("kmeans-encoder", d))
         if a and b:
-            print(f"clustering/speedup_dbscanpxy_over_kmeans/{d},0,"
-                  f"{a['seconds'] / max(b['seconds'], 1e-9):.1f}x")
+            emit(f"clustering/speedup_dbscanpxy_over_kmeans/{d}",
+                 text=f"{a['seconds'] / max(b['seconds'], 1e-9):.1f}x")
         mb = by.get(("minibatch-encoder", d))
         if b and mb:
             q = mb["inertia"] / max(b["inertia"], 1e-9)
-            print(f"clustering/minibatch_speedup_over_kmeans/{d},0,"
-                  f"{b['seconds'] / max(mb['seconds'], 1e-9):.1f}x "
-                  f"(inertia ratio {q:.2f}; <1x expected at small N — "
-                  f"mini-batch pays off at fleet scale, see fleet rows)")
+            emit(f"clustering/minibatch_speedup_over_kmeans/{d}",
+                 text=f"{b['seconds'] / max(mb['seconds'], 1e-9):.1f}x "
+                      f"(inertia ratio {q:.2f}; <1x expected at small N — "
+                      f"mini-batch pays off at fleet scale, see fleet rows)")
     # fleet scale: the batched engine's clustering side (DESIGN.md §4)
     fleet = run_fleet(n=6000 if fast else 20000, dim=4030)
     rows += fleet
     for r in fleet:
-        print(f"{r['name']},{r['seconds'] * 1e6:.0f},"
-              f"n={r['n']};dim={r['dim']};inertia={r['inertia']:.3g}")
-    print(f"clustering/fleet_speedup_minibatch,0,"
-          f"{fleet[0]['seconds'] / max(fleet[1]['seconds'], 1e-9):.1f}x "
-          f"(inertia ratio "
-          f"{fleet[1]['inertia'] / max(fleet[0]['inertia'], 1e-9):.2f})")
+        emit(r["name"], us=r["seconds"] * 1e6, n=r["n"], dim=r["dim"],
+             inertia=f"{r['inertia']:.3g}")
+    emit("clustering/fleet_speedup_minibatch",
+         text=f"{fleet[0]['seconds'] / max(fleet[1]['seconds'], 1e-9):.1f}x "
+              f"(inertia ratio "
+              f"{fleet[1]['inertia'] / max(fleet[0]['inertia'], 1e-9):.2f})")
 
     # online maintenance vs full recluster at >=10k clients (DESIGN.md §5)
     online = run_online(n=10_000 if fast else 100_000,
@@ -200,13 +201,14 @@ def main(fast: bool = True):
     for r in online:
         per_round_full = r["full_recluster_s"] / r["rounds"]
         per_round_online = r["online_s"] / r["rounds"]
-        print(f"{r['name']}/full_per_round,{per_round_full * 1e6:.0f},"
-              f"n={r['n']};dim={r['dim']};drift={r['drift_frac']}")
-        print(f"{r['name']}/online_per_round,{per_round_online * 1e6:.0f},"
-              f"full_fits={r['full_fits']};init_s={r['online_init_s']:.3f}")
-        print(f"{r['name']}/speedup,0,"
-              f"{per_round_full / max(per_round_online, 1e-9):.1f}x "
-              f"(inertia ratio {r['online_inertia'] / max(r['full_inertia'], 1e-9):.3f})")
+        emit(f"{r['name']}/full_per_round", us=per_round_full * 1e6,
+             n=r["n"], dim=r["dim"], drift=r["drift_frac"])
+        emit(f"{r['name']}/online_per_round", us=per_round_online * 1e6,
+             full_fits=r["full_fits"], init_s=f"{r['online_init_s']:.3f}")
+        emit(f"{r['name']}/speedup",
+             text=f"{per_round_full / max(per_round_online, 1e-9):.1f}x "
+                  f"(inertia ratio "
+                  f"{r['online_inertia'] / max(r['full_inertia'], 1e-9):.3f})")
 
     # paper-scale extrapolation: DBSCAN is O(N²·D); K-means O(N·K·D·iters).
     # Scale the measured times to the paper's client counts and the real
@@ -217,10 +219,10 @@ def main(fast: bool = True):
         n_full, d_pxy_full = 11_325, 600 * 192 * 8
         t_db = a["seconds"] * (n_full / a["n"]) ** 2 * (d_pxy_full / a["dim"])
         t_km = b["seconds"] * (n_full / b["n"])
-        print(f"clustering/extrapolated_dbscanpxy_full_s,0,{t_db:.0f}"
-              f" ({t_db / 3600:.1f}h; paper: >2 days)")
-        print(f"clustering/extrapolated_speedup_full,0,"
-              f"{t_db / max(t_km, 1e-9):.0f}x (paper: >=360x)")
+        emit("clustering/extrapolated_dbscanpxy_full_s",
+             text=f"{t_db:.0f} ({t_db / 3600:.1f}h; paper: >2 days)")
+        emit("clustering/extrapolated_speedup_full",
+             text=f"{t_db / max(t_km, 1e-9):.0f}x (paper: >=360x)")
     return rows
 
 

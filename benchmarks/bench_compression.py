@@ -15,6 +15,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from benchmarks._record import emit
 from repro.core import encoder_summary, kmeans
 from repro.core.compression import (
     compressed_bytes, dequantize_summary, jl_project, pca_project,
@@ -75,8 +76,8 @@ def main(fast: bool = True):
     base = next(r for r in rows if r["method"] == "none")
     for r in rows:
         ratio = base["bytes_per_client"] / max(r["bytes_per_client"], 1)
-        print(f"{r['name']},0,bytes={r['bytes_per_client']};"
-              f"purity={r['purity']:.2f};compression={ratio:.0f}x")
+        emit(r["name"], bytes=r["bytes_per_client"],
+             purity=f"{r['purity']:.2f}", compression=f"{ratio:.0f}x")
     return rows
 
 

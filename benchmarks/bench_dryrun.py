@@ -12,6 +12,8 @@ import glob
 import json
 import os
 
+from benchmarks._record import emit
+
 
 def load_records(pattern: str = "results/dryrun*.jsonl") -> list:
     recs = {}
@@ -62,16 +64,17 @@ def markdown_table(recs: list) -> str:
 def main(fast: bool = True):
     recs = load_records()
     if not recs:
-        print("dryrun/none,0,run `python -m repro.launch.dryrun --all` first")
+        emit("dryrun/none",
+             text="run `python -m repro.launch.dryrun --all` first")
         return []
     ok = [r for r in recs if r.get("status") == "ok"]
     for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
         rl = r["roofline"]
-        print(f"dryrun/{r['arch']}/{r['shape']}/{r['mesh']},"
-              f"{r.get('compile_s', 0) * 1e6:.0f},"
-              f"dom={rl['dominant']};tc={rl['t_compute_s']:.3g};"
-              f"tm={rl['t_memory_s']:.3g};tx={rl['t_collective_s']:.3g};"
-              f"useful={rl['useful_ratio']:.2f}")
+        emit(f"dryrun/{r['arch']}/{r['shape']}/{r['mesh']}",
+             us=r.get("compile_s", 0) * 1e6, dom=rl["dominant"],
+             tc=f"{rl['t_compute_s']:.3g}", tm=f"{rl['t_memory_s']:.3g}",
+             tx=f"{rl['t_collective_s']:.3g}",
+             useful=f"{rl['useful_ratio']:.2f}")
     # serving throughput: decode step bound-time -> tokens/s per chip
     for r in ok:
         if r["shape"] in ("decode_32k", "long_500k") and not r.get("tag"):
@@ -80,12 +83,12 @@ def main(fast: bool = True):
                         rl["t_collective_s"])
             batch = 128 if r["shape"] == "decode_32k" else 1
             tps = batch / max(bound, 1e-12) / rl["chips"]
-            print(f"dryrun/tokens_per_s_per_chip/{r['arch']}/{r['shape']}"
-                  f"/{r['mesh']},0,{tps:.3g}")
+            emit(f"dryrun/tokens_per_s_per_chip/{r['arch']}/{r['shape']}"
+                 f"/{r['mesh']}", text=f"{tps:.3g}")
     skipped = [r for r in recs if r.get("status") == "skipped"]
     errors = [r for r in recs if r.get("status") not in ("ok", "skipped")]
-    print(f"dryrun/summary,0,ok={len(ok)};skipped={len(skipped)};"
-          f"errors={len(errors)}")
+    emit("dryrun/summary", ok=len(ok), skipped=len(skipped),
+         errors=len(errors))
     return recs
 
 

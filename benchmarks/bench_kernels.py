@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks._record import emit
 from repro.kernels import ops, ref
 
 
@@ -70,7 +71,7 @@ def main(fast: bool = True):
     rows = run(n_clients=512 if fast else 4096, dim=1024 if fast else 8192,
                coreset=256 if fast else 1024, feat_d=128 if fast else 512)
     for r in rows:
-        print(f"{r['name']},{r['us']:.0f},{r['derived']}")
+        emit(r["name"], us=r["us"], text=r["derived"])
     return rows
 
 

@@ -28,6 +28,7 @@ import time
 import jax
 import numpy as np
 
+from benchmarks._record import emit
 from repro.checkpoint import load_state, save_state
 from repro.checkpoint.durable import EventLog
 from repro.checkpoint.server_state import (
@@ -128,16 +129,17 @@ def main(fast: bool = True, seed: int = 0):
     for n in sizes:
         r = bench_checkpoint(n, seed=seed)
         rows.append(r)
-        print(f"server_resume/ckpt_save/n{n},{r['save_s'] * 1e6:.0f},"
-              f"bytes={r['bytes']}")
-        print(f"server_resume/ckpt_load/n{n},{r['load_s'] * 1e6:.0f},"
-              f"restore_included")
+        emit(f"server_resume/ckpt_save/n{n}", us=r["save_s"] * 1e6,
+             bytes=r["bytes"])
+        emit(f"server_resume/ckpt_load/n{n}", us=r["load_s"] * 1e6,
+             text="restore_included")
     ap = bench_log_append()
-    print(f"server_resume/log_append,{ap * 1e6:.2f},per_record_flush")
+    emit("server_resume/log_append", us=ap * 1e6,
+         text="per_record_flush")
     rr = bench_resume_run(seed=seed)
-    print(f"server_resume/resume/run,{rr['resumed_s'] * 1e6:.0f},"
-          f"plain_s={rr['plain_s']:.3f};resumed_s={rr['resumed_s']:.3f};"
-          f"overhead={rr['overhead']:.2f}")
+    emit("server_resume/resume/run", us=rr["resumed_s"] * 1e6,
+         plain_s=f"{rr['plain_s']:.3f}", resumed_s=f"{rr['resumed_s']:.3f}",
+         overhead=f"{rr['overhead']:.2f}")
     rows.append(rr)
     return rows
 

@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from benchmarks._record import emit
 from repro.data.synthetic import FederatedDataset, small_spec
 from repro.fl import FLConfig, run_federated
 from repro.fl.system import SystemSpec
@@ -96,26 +97,27 @@ def main(fast: bool = True):
     rows = run(rounds=8 if fast else 20, clients=30 if fast else 80,
                target_acc=0.7 if fast else 0.85)
     for r in rows:
-        print(f"{r['name']},0,final_acc={r['final_acc']:.3f};"
-              f"t_target={r['t_to_target']:.1f};sim_time={r['sim_time']:.1f};"
-              f"refreshes={r['refreshes']}")
+        emit(r["name"], final_acc=f"{r['final_acc']:.3f}",
+             t_target=f"{r['t_to_target']:.1f}",
+             sim_time=f"{r['sim_time']:.1f}", refreshes=r["refreshes"])
     base = next(r for r in rows if r["strategy"] == "random")
     ours = next(r for r in rows if r["strategy"] == "haccs")
     if np.isfinite(ours["t_to_target"]) and np.isfinite(base["t_to_target"]):
         red = 1 - ours["t_to_target"] / base["t_to_target"]
-        print(f"selection/time_reduction_vs_random,0,{red * 100:.1f}%")
+        emit("selection/time_reduction_vs_random",
+             text=f"{red * 100:.1f}%")
 
     fast_combos = (("dict", "kmeans"), ("streaming", "online"))
     sc_rows = run_scenarios(
         rounds=4 if fast else 12, clients=32 if fast else 96,
         combos=fast_combos if fast else SCENARIO_COMBOS)
     for r in sc_rows:
-        print(f"{r['name']},0,final_acc={r['final_acc']:.3f};"
-              f"kl_cov={r['kl_coverage']:.4f};dropped={r['dropped']};"
-              f"dropped_rounds={r['dropped_rounds']};"
-              f"summary_s={r['summary_s']:.3f};"
-              f"sim_time={r['sim_time']:.1f};refreshes={r['refreshes']};"
-              f"mean_active={r['mean_active']:.1f}")
+        emit(r["name"], final_acc=f"{r['final_acc']:.3f}",
+             kl_cov=f"{r['kl_coverage']:.4f}", dropped=r["dropped"],
+             dropped_rounds=r["dropped_rounds"],
+             summary_s=f"{r['summary_s']:.3f}",
+             sim_time=f"{r['sim_time']:.1f}", refreshes=r["refreshes"],
+             mean_active=f"{r['mean_active']:.1f}")
     return rows + sc_rows
 
 

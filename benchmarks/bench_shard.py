@@ -22,6 +22,7 @@ import time
 import jax
 import numpy as np
 
+from benchmarks._record import emit
 from repro.core.scheduler import RefreshPolicy
 from repro.shard import HierarchicalClusterMaintainer, ShardedSummaryRegistry
 from repro.sim import drift_fleet, synthetic_fleet
@@ -105,20 +106,21 @@ def main(fast: bool = True):
     for n in (100_000, 1_000_000):
         r = run_scan(n)
         rows.append(r)
-        print(f"sharded/scan/n{n},{r['scan_s'] * 1e6:.0f},"
-              f"n_shards={r['n_shards']};scan_s={r['scan_s']:.4f};"
-              f"numpy_s={r['numpy_s']:.4f};chunks={r['chunks']};"
-              f"chunk_rows={r['chunk_rows']};stale={r['stale']};"
-              f"peak_mb={r['peak_mb']:.0f}")
+        emit(f"sharded/scan/n{n}", us=r["scan_s"] * 1e6,
+             n_shards=r["n_shards"], scan_s=f"{r['scan_s']:.4f}",
+             numpy_s=f"{r['numpy_s']:.4f}", chunks=r["chunks"],
+             chunk_rows=r["chunk_rows"], stale=r["stale"],
+             peak_mb=f"{r['peak_mb']:.0f}")
 
     for n in ((100_000,) if fast else (100_000, 1_000_000)):
         r = run_pipeline(n)
         rows.append(r)
-        print(f"sharded/pipeline/n{n},{(r['scan_s'] + r['scatter_s'] + r['merge_s']) * 1e6:.0f},"
-              f"n_shards={r['n_shards']};scan_s={r['scan_s']:.4f};"
-              f"merge_s={r['merge_s']:.4f};scatter_s={r['scatter_s']:.5f};"
-              f"seed_s={r['seed_s']:.3f};stale={r['stale']};"
-              f"peak_mb={r['peak_mb']:.0f}")
+        emit(f"sharded/pipeline/n{n}",
+             us=(r["scan_s"] + r["scatter_s"] + r["merge_s"]) * 1e6,
+             n_shards=r["n_shards"], scan_s=f"{r['scan_s']:.4f}",
+             merge_s=f"{r['merge_s']:.4f}", scatter_s=f"{r['scatter_s']:.5f}",
+             seed_s=f"{r['seed_s']:.3f}", stale=r["stale"],
+             peak_mb=f"{r['peak_mb']:.0f}")
     return rows
 
 

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks._record import emit
 from repro.data.synthetic import DatasetSpec, FederatedDataset
 from repro.fl.client import timed_summary
 from repro.models.cnn import CNNConfig, build_cnn, cnn_apply
@@ -83,13 +84,14 @@ def main(fast: bool = True):
                openimage_clients=2000 if fast else 11325)
     der = {}
     for r in rows:
-        print(f"{r['name']},{r['avg_s'] * 1e6:.0f},"
-              f"max_s={r['max_s']:.4f};dim={r['summary_dim']}")
+        emit(r["name"], us=r["avg_s"] * 1e6, max_s=f"{r['max_s']:.4f}",
+             dim=r["summary_dim"])
         der[(r["method"], r["dataset"])] = r
     for d in ("femnist", "openimage"):
         if ("pxy", d) in der and ("encoder", d) in der:
             sp = der[("pxy", d)]["max_s"] / max(der[("encoder", d)]["max_s"], 1e-9)
-            print(f"summary/speedup_pxy_over_encoder/{d},0,{sp:.1f}x")
+            emit(f"summary/speedup_pxy_over_encoder/{d}",
+                 text=f"{sp:.1f}x")
     # paper-scale extrapolation: P(X|y) cost grows linearly in the raw
     # feature dim D (histogram over every dim); the encoder summary is
     # ~constant in D (coreset + fixed CNN).  Fit t = a·D from the two
@@ -102,10 +104,11 @@ def main(fast: bool = True):
         d_full = 3 * 256 * 256                       # paper's 3x256x256
         t_full = t_per_dim * d_full
         enc = der[("encoder", "openimage")]["max_s"]
-        print(f"summary/extrapolated_pxy_fullres_s,0,{t_full:.1f}")
-        print(f"summary/extrapolated_speedup_fullres,0,"
-              f"{t_full / max(enc, 1e-9):.0f}x"
-              f" (linear-in-D fit; paper measured ~30x on mobile hardware)")
+        emit("summary/extrapolated_pxy_fullres_s", text=f"{t_full:.1f}")
+        emit("summary/extrapolated_speedup_fullres",
+             text=f"{t_full / max(enc, 1e-9):.0f}x"
+                  f" (linear-in-D fit; paper measured ~30x on mobile "
+                  f"hardware)")
     return rows
 
 

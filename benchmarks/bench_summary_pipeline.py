@@ -22,6 +22,7 @@ import numpy as np
 
 import jax
 
+from benchmarks._record import emit
 from repro.core import BatchedSummaryEngine, RefreshPolicy, SummaryRegistry
 from repro.stream import StreamingSummaryRegistry
 from repro.data.synthetic import DatasetSpec, FederatedDataset, small_spec
@@ -149,11 +150,11 @@ def main(fast: bool = True):
     by = {}
     for r in rows:
         by[(r["method"], r["variant"])] = r["avg_s"]
-        print(f"{r['name']},{r['avg_s'] * 1e6:.0f},")
+        emit(r["name"], us=r["avg_s"] * 1e6)
     for m in ("py", "pxy", "encoder"):
         if (m, "eager") in by and (m, "jit+bucket") in by:
             sp = by[(m, "eager")] / max(by[(m, "jit+bucket")], 1e-9)
-            print(f"pipeline/{m}/speedup,0,{sp:.1f}x")
+            emit(f"pipeline/{m}/speedup", text=f"{sp:.1f}x")
 
     # fleet scale: the acceptance bar is >=512 clients refreshed with >=5x
     # fewer jitted dispatches than the per-client path, equal summaries
@@ -162,29 +163,30 @@ def main(fast: bool = True):
                       else ("py", "encoder", "pxy"))
     for r in fleet:
         m = r["method"]
-        print(f"pipeline/fleet/{m}/perclient,"
-              f"{r['perclient_s'] / r['clients'] * 1e6:.0f},"
-              f"dispatches={r['perclient_dispatches']}")
-        print(f"pipeline/fleet/{m}/batched,"
-              f"{r['batched_s'] / r['clients'] * 1e6:.0f},"
-              f"dispatches={r['batched_dispatches']}")
+        emit(f"pipeline/fleet/{m}/perclient",
+             us=r["perclient_s"] / r["clients"] * 1e6,
+             dispatches=r["perclient_dispatches"])
+        emit(f"pipeline/fleet/{m}/batched",
+             us=r["batched_s"] / r["clients"] * 1e6,
+             dispatches=r["batched_dispatches"])
         disp_ratio = (r["perclient_dispatches"]
                       / max(r["batched_dispatches"], 1))
-        print(f"pipeline/fleet/{m}/dispatch_reduction,0,{disp_ratio:.1f}x")
-        print(f"pipeline/fleet/{m}/speedup,0,"
-              f"{r['perclient_s'] / max(r['batched_s'], 1e-9):.1f}x")
-        print(f"pipeline/fleet/{m}/equal,0,{r['equal']}")
+        emit(f"pipeline/fleet/{m}/dispatch_reduction",
+             text=f"{disp_ratio:.1f}x")
+        emit(f"pipeline/fleet/{m}/speedup",
+             text=f"{r['perclient_s'] / max(r['batched_s'], 1e-9):.1f}x")
+        emit(f"pipeline/fleet/{m}/equal", text=str(r["equal"]))
 
     # registry scan at fleet scale (DESIGN.md §5)
     reg = run_registry(n=20_000 if fast else 100_000)
     for r in reg:
-        print(f"{r['name']}/loop,{r['loop_s'] * 1e6:.0f},"
-              f"n={r['n']};stale={r['stale']}")
-        print(f"{r['name']}/vectorized,{r['vectorized_s'] * 1e6:.0f},"
-              f"{r['loop_s'] / max(r['vectorized_s'], 1e-9):.1f}x_vs_loop")
-        print(f"{r['name']}/streaming,{r['streaming_s'] * 1e6:.0f},"
-              f"{r['loop_s'] / max(r['streaming_s'], 1e-9):.1f}x_vs_loop "
-              f"(scan + O(drifted) scatter + zero-copy matrix)")
+        emit(f"{r['name']}/loop", us=r["loop_s"] * 1e6, n=r["n"],
+             stale=r["stale"])
+        emit(f"{r['name']}/vectorized", us=r["vectorized_s"] * 1e6,
+             text=f"{r['loop_s'] / max(r['vectorized_s'], 1e-9):.1f}x_vs_loop")
+        emit(f"{r['name']}/streaming", us=r["streaming_s"] * 1e6,
+             text=f"{r['loop_s'] / max(r['streaming_s'], 1e-9):.1f}x_vs_loop "
+                  f"(scan + O(drifted) scatter + zero-copy matrix)")
     return rows + fleet + reg
 
 

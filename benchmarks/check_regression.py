@@ -4,9 +4,8 @@ baseline.
     PYTHONPATH=src python -m benchmarks.check_regression \
         BENCH.json BENCH_baseline.json --tolerance 2.5
 
-For each gated record group (the segment of the CSV name before the first
-``/`` — ``summary``, ``clustering``, ``sharded``, ``server`` by default)
-the gate
+For each gated record group (the segment of the CSV name before the
+first ``/`` — see ``DEFAULT_GROUPS``) the gate
 compares the *median* ``us_per_call`` of the current run against the
 committed ``BENCH_baseline.json`` and fails when the ratio exceeds the
 tolerance band.  Medians over a whole group are robust to one noisy
@@ -29,20 +28,48 @@ import statistics
 import sys
 
 DEFAULT_GROUPS = ("summary", "clustering", "sharded", "server",
-                  "server_resume")
+                  "server_resume", "obs")
 
 
-def group_medians(report: dict, groups: tuple[str, ...]) -> dict[str, float]:
-    """Median us_per_call per record-name group.  Records with
+def group_records(report: dict,
+                  groups: tuple[str, ...]) -> dict[str, dict[str, float]]:
+    """Per-group ``{record name: us_per_call}``.  Records with
     ``us_per_call == 0`` are derived-only rows (speedup ratios, flags) —
     they carry no latency and are excluded."""
-    samples: dict[str, list[float]] = {g: [] for g in groups}
+    recs: dict[str, dict[str, float]] = {g: {} for g in groups}
     for bench in report.get("benches", {}).values():
         for rec in bench.get("records", []):
             g = rec["name"].split("/", 1)[0]
-            if g in samples and rec["us_per_call"] > 0:
-                samples[g].append(rec["us_per_call"])
-    return {g: statistics.median(v) for g, v in samples.items() if v}
+            if g in recs and rec["us_per_call"] > 0:
+                recs[g][rec["name"]] = rec["us_per_call"]
+    return {g: v for g, v in recs.items() if v}
+
+
+def group_medians(report: dict, groups: tuple[str, ...]) -> dict[str, float]:
+    """Median us_per_call per record-name group."""
+    return {g: statistics.median(v.values())
+            for g, v in group_records(report, groups).items()}
+
+
+def print_offenders(name_current: dict[str, float],
+                    name_baseline: dict[str, float],
+                    tolerance: float) -> None:
+    """The per-record observed-vs-baseline breakdown behind a failed
+    group median — so debugging a gate trip starts from *which record
+    moved*, not from rerunning the sweep by hand."""
+    names = sorted(set(name_current) | set(name_baseline),
+                   key=lambda n: -(name_current.get(n, 0.0)
+                                   / max(name_baseline.get(n, 0.0), 1e-9)))
+    for n in names:
+        cur, base = name_current.get(n), name_baseline.get(n)
+        if cur is None or base is None:
+            side = "baseline" if cur is None else "current run"
+            print(f"    {n:44s} only in {side}", file=sys.stderr)
+            continue
+        ratio = cur / max(base, 1e-9)
+        flag = "  <-- over tolerance" if ratio > tolerance else ""
+        print(f"    {n:44s} {cur:12.2f}us  baseline {base:12.2f}us  "
+              f"{ratio:6.2f}x{flag}", file=sys.stderr)
 
 
 def main(argv=None) -> None:
@@ -57,11 +84,14 @@ def main(argv=None) -> None:
     groups = tuple(filter(None, args.groups.split(",")))
 
     with open(args.current) as f:
-        current = group_medians(json.load(f), groups)
+        cur_recs = group_records(json.load(f), groups)
     with open(args.baseline) as f:
-        baseline = group_medians(json.load(f), groups)
+        base_recs = group_records(json.load(f), groups)
+    current = {g: statistics.median(v.values()) for g, v in cur_recs.items()}
+    baseline = {g: statistics.median(v.values()) for g, v in base_recs.items()}
 
     failures = []
+    offending: list[str] = []
     for g in groups:
         if g not in baseline:
             print(f"{g:12s} no baseline records — skipped (regenerate the "
@@ -70,6 +100,7 @@ def main(argv=None) -> None:
         if g not in current:
             failures.append(f"{g}: present in baseline but missing from "
                             f"the current run")
+            offending.append(g)
             continue
         ratio = current[g] / baseline[g]
         verdict = "OK"
@@ -78,6 +109,7 @@ def main(argv=None) -> None:
             failures.append(f"{g}: median {current[g]:.0f}us vs baseline "
                             f"{baseline[g]:.0f}us ({ratio:.2f}x > "
                             f"{args.tolerance}x)")
+            offending.append(g)
         elif ratio < 1.0 / args.tolerance:
             verdict = "improved — consider refreshing the baseline"
         print(f"{g:12s} median {current[g]:12.0f}us  baseline "
@@ -87,6 +119,11 @@ def main(argv=None) -> None:
         print("\nPERF REGRESSION GATE FAILED:", file=sys.stderr)
         for f_ in failures:
             print(f"  - {f_}", file=sys.stderr)
+        for g in offending:
+            print(f"\n  {g} records (observed vs baseline):",
+                  file=sys.stderr)
+            print_offenders(cur_recs.get(g, {}), base_recs.get(g, {}),
+                            args.tolerance)
         sys.exit(1)
     print("perf gate passed")
 

@@ -14,6 +14,8 @@ Prints ``name,us_per_call,derived`` CSV lines:
   * bench_resume      — §9 durability: checkpoint save/load, event-log
                         append, and kill+resume overhead
   * bench_dryrun      — §Roofline table from dry-run artifacts (if present)
+  * bench_obs         — §10 telemetry: enabled-tracer overhead vs the 2%
+                        budget + per-hook microcosts
 
 and mirrors every CSV record into a machine-readable ``BENCH.json``
 (``--json PATH`` to relocate, ``--no-json`` to disable) so the perf
@@ -38,6 +40,7 @@ from benchmarks import (
     bench_compression,
     bench_dryrun,
     bench_kernels,
+    bench_obs,
     bench_resume,
     bench_selection,
     bench_server,
@@ -45,6 +48,7 @@ from benchmarks import (
     bench_summary,
     bench_summary_pipeline,
 )
+from benchmarks._record import SCHEMA_VERSION
 
 BENCHES = (
     ("summary", bench_summary.main),
@@ -55,6 +59,7 @@ BENCHES = (
     ("shard", bench_shard.main),
     ("server", bench_server.main),
     ("resume", bench_resume.main),
+    ("obs", bench_obs.main),
     ("compression", bench_compression.main),
     ("dryrun", bench_dryrun.main),
 )
@@ -123,12 +128,11 @@ def main(argv=None) -> None:
 
     print("name,us_per_call,derived")
     failures = []
-    # schema 5: adds the durability bench — server_resume/* records
-    # (checkpoint save/load at fleet scale, log-append cost, end-to-end
-    # kill+resume overhead, gated in CI) — on top of schema 4's async
-    # server records, schema 3's sharded records and schema 2's scenario
-    # sweep
-    report: dict = {"schema": 5, "full": bool(args.full),
+    # schema history lives with the record format in benchmarks._record
+    # (6: obs/* overhead + server/percentiles/* latency-distribution
+    # records; 5: server_resume/* durability; 4: async server/*;
+    # 3: sharded/*; 2: scenario sweep)
+    report: dict = {"schema": SCHEMA_VERSION, "full": bool(args.full),
                     "seed": int(args.seed),
                     "scenario_presets": list(PRESET_NAMES), "benches": {}}
     for name, fn in BENCHES:

@@ -34,6 +34,7 @@ import dataclasses
 import json
 import os
 
+import repro.obs as obs
 from repro.checkpoint.checkpoint import load_state, save_state
 
 LOG_NAME = "events.jsonl"
@@ -93,6 +94,7 @@ class EventLog:
         if self._fsync:
             os.fsync(self._f.fileno())
         self.appended += 1
+        obs.metrics().counter("durable/log_appends").inc()
 
     def close(self) -> None:
         self._f.close()
@@ -155,7 +157,9 @@ class DurableSession:
         if (rnd + 1) % self.durable.checkpoint_every or rnd + 1 >= total_rounds:
             return
         base = f"{_CKPT_PREFIX}{rnd:06d}"
-        save_state(os.path.join(self.durable.dir, base), state_fn())
+        with obs.span("checkpoint/save", cat="durable", round=rnd):
+            save_state(os.path.join(self.durable.dir, base), state_fn())
+        obs.metrics().counter("durable/checkpoints_saved").inc()
         self.log.append({"type": "checkpoint", "round": int(rnd),
                          "base": base})
 
@@ -169,7 +173,11 @@ class DurableSession:
                 continue
             base = os.path.join(self.durable.dir, rec["base"])
             try:
-                return int(rec["round"]), load_state(base)
+                with obs.span("checkpoint/load", cat="durable",
+                              round=int(rec["round"])):
+                    state = load_state(base)
+                obs.metrics().counter("durable/checkpoints_loaded").inc()
+                return int(rec["round"]), state
             except FileNotFoundError:
                 continue       # log won the race against the rename pair
         return None

@@ -48,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.obs as obs
 from repro.checkpoint.durable import Durability, DurableSession
 from repro.checkpoint.server_state import context_state, restore_context
 from repro.core import (
@@ -300,7 +301,12 @@ class RoundContext:
         self.dropped_rounds = 0
         self.recluster_count = 0
         self._acc = float("nan")
-        self._scan_s = self._cluster_s = self._drain_s = 0.0
+        # per-run metric registry (DESIGN.md §10): the history's
+        # server_*_s keys are per-round views over these meters, the
+        # registry keeps the lifetime latency histograms / percentiles
+        self.metrics = obs.MetricRegistry()
+        self._meters = obs.StageMeters(self.metrics,
+                                       ("scan", "cluster", "drain"))
 
     # ------------------------------------------------------------------
     # stage: membership + cheap drift signal
@@ -312,7 +318,7 @@ class RoundContext:
     def begin_round(self, rnd: int):
         """Advance the scenario, evict departures, refresh the cheap P(y)
         drift signal.  Resets the per-round server-overhead meters."""
-        self._scan_s = self._cluster_s = self._drain_s = 0.0
+        self._meters.reset()
         plan = self.scenario.round_plan(rnd)
         for c in plan.departed:
             self.registry.remove(int(c))
@@ -330,10 +336,12 @@ class RoundContext:
         (async ingest pipelining) — empty in sync mode by construction."""
         if not self.uses_summaries:
             return []
-        t0 = time.perf_counter()
-        mask = self.registry.stale_mask(rnd, fresh, active=plan.active)
-        self._scan_s += time.perf_counter() - t0
-        stale = [int(c) for c in np.flatnonzero(mask)]
+        with obs.span("drift_scan", round=rnd) as sp:
+            t0 = time.perf_counter()
+            mask = self.registry.stale_mask(rnd, fresh, active=plan.active)
+            self._meters.add("scan", time.perf_counter() - t0)
+            stale = [int(c) for c in np.flatnonzero(mask)]
+            sp.annotate(n_stale=len(stale))
         if exclude:
             stale = [c for c in stale if c not in exclude]
         return stale
@@ -355,6 +363,13 @@ class RoundContext:
         wall = 0.0
         if not stale:
             return summaries, times, wall
+        with obs.span("client_summaries", cat="client", round=rnd,
+                      n_stale=len(stale)):
+            self._compute_summaries(rnd, stale, drift, summaries, times)
+        wall = sum(times.values())
+        return summaries, times, wall
+
+    def _compute_summaries(self, rnd, stale, drift, summaries, times):
         if self.engine is not None:
             results = self.engine.summarize_clients(
                 stale, self.data.sizes,
@@ -363,7 +378,6 @@ class RoundContext:
             for c, res in results.items():
                 summaries[c] = res.summary
                 times[c] = res.seconds
-                wall += res.seconds
         else:
             cfg = self.cfg
             for c in stale:
@@ -376,8 +390,6 @@ class RoundContext:
                     key=jax.random.PRNGKey(rnd * 100003 + c))
                 summaries[c] = s
                 times[c] = dt
-                wall += dt
-        return summaries, times, wall
 
     # ------------------------------------------------------------------
     # stage: registry ingest (O(M) scatter)
@@ -392,16 +404,17 @@ class RoundContext:
         real drift, not sampling noise."""
         if not summaries:
             return
-        t0 = time.perf_counter()
-        if isinstance(self.registry, StreamingSummaryRegistry):
-            ids = list(summaries)
-            self.registry.update_batch(
-                ids, rnd, np.stack([summaries[c] for c in ids]),
-                np.stack([fresh_rows[c] for c in ids]))
-        else:
-            for c, s in summaries.items():
-                self.registry.update(c, rnd, s, fresh_rows[c])
-        self._drain_s += time.perf_counter() - t0
+        with obs.span("registry_scatter", round=rnd, batch=len(summaries)):
+            t0 = time.perf_counter()
+            if isinstance(self.registry, StreamingSummaryRegistry):
+                ids = list(summaries)
+                self.registry.update_batch(
+                    ids, rnd, np.stack([summaries[c] for c in ids]),
+                    np.stack([fresh_rows[c] for c in ids]))
+            else:
+                for c, s in summaries.items():
+                    self.registry.update(c, rnd, s, fresh_rows[c])
+            self._meters.add("drain", time.perf_counter() - t0)
 
     # ------------------------------------------------------------------
     # stage: clustering refresh
@@ -439,39 +452,41 @@ class RoundContext:
         (the caller owns the cadence: sync gating or the async staleness
         policy).  Returns the wall seconds this rebuild took."""
         cfg, spec = self.cfg, self.spec
-        t0 = time.perf_counter()
-        if self.maintainer is not None:
-            # online maintenance: assign-only for the drifted set; rows
-            # keep fleet indexing (zeros for absent clients) so the
-            # maintainer's state stays aligned under churn
-            self.maintainer.refresh(
-                np.asarray(self.registry.dense(), np.float32),
-                np.asarray(drifted, np.int64),
-                jax.random.PRNGKey(cfg.seed + rnd),
-                live=self.registry.has_mask() & active)
-            if self.maintainer.assignment is not None:
-                self.assignment = self.maintainer.assignment
-                self.num_clusters = cfg.num_clusters
-        else:
-            have_ids = np.flatnonzero(self.registry.has_mask() & active)
-            X = jnp.asarray(self.registry.matrix_rows(have_ids), jnp.float32)
-            assignment = np.full(spec.num_clients, -1, np.int64)
-            if cfg.clustering in ("kmeans", "minibatch"):
-                cluster_fn = (minibatch_kmeans
-                              if cfg.clustering == "minibatch" else kmeans)
-                res = cluster_fn(X, cfg.num_clusters,
-                                 jax.random.PRNGKey(cfg.seed + rnd))
-                assignment[have_ids] = np.asarray(res.assignment, np.int64)
-                self.num_clusters = cfg.num_clusters
+        with obs.span("recluster", round=rnd, n_drifted=int(len(drifted))):
+            t0 = time.perf_counter()
+            if self.maintainer is not None:
+                # online maintenance: assign-only for the drifted set; rows
+                # keep fleet indexing (zeros for absent clients) so the
+                # maintainer's state stays aligned under churn
+                self.maintainer.refresh(
+                    np.asarray(self.registry.dense(), np.float32),
+                    np.asarray(drifted, np.int64),
+                    jax.random.PRNGKey(cfg.seed + rnd),
+                    live=self.registry.has_mask() & active)
+                if self.maintainer.assignment is not None:
+                    self.assignment = self.maintainer.assignment
+                    self.num_clusters = cfg.num_clusters
             else:
-                med = float(jnp.median(jnp.sqrt(
-                    jnp.sum(jnp.square(X - X.mean(0)), -1))))
-                res = dbscan(X, eps=med * 0.5, min_samples=3)
-                assignment[have_ids] = np.asarray(res.labels, np.int64)
-                self.num_clusters = max(int(res.num_clusters), 1)
-            self.assignment = assignment
-        dt = time.perf_counter() - t0
-        self._cluster_s += dt
+                have_ids = np.flatnonzero(self.registry.has_mask() & active)
+                X = jnp.asarray(self.registry.matrix_rows(have_ids),
+                                jnp.float32)
+                assignment = np.full(spec.num_clients, -1, np.int64)
+                if cfg.clustering in ("kmeans", "minibatch"):
+                    cluster_fn = (minibatch_kmeans
+                                  if cfg.clustering == "minibatch" else kmeans)
+                    res = cluster_fn(X, cfg.num_clusters,
+                                     jax.random.PRNGKey(cfg.seed + rnd))
+                    assignment[have_ids] = np.asarray(res.assignment, np.int64)
+                    self.num_clusters = cfg.num_clusters
+                else:
+                    med = float(jnp.median(jnp.sqrt(
+                        jnp.sum(jnp.square(X - X.mean(0)), -1))))
+                    res = dbscan(X, eps=med * 0.5, min_samples=3)
+                    assignment[have_ids] = np.asarray(res.labels, np.int64)
+                    self.num_clusters = max(int(res.num_clusters), 1)
+                self.assignment = assignment
+            dt = time.perf_counter() - t0
+            self._meters.add("cluster", dt)
         self.recluster_count += 1
         return dt
 
@@ -498,9 +513,12 @@ class RoundContext:
             sel_assignment[~(np.asarray(has_mask, bool) & plan.active)] = -1
         else:
             sel_assignment = assignment
-        selected = select_devices(sel_assignment, num_clusters, plan.speeds,
-                                  plan.available, self.sel_cfg, self.rng,
-                                  active=plan.active)
+        with obs.span("select_devices", round=rnd) as sp:
+            selected = select_devices(sel_assignment, num_clusters,
+                                      plan.speeds, plan.available,
+                                      self.sel_cfg, self.rng,
+                                      active=plan.active)
+            sp.annotate(n_selected=int(np.asarray(selected).size))
         self.scenario.note_selected(selected)
         return np.asarray(selected, np.int64)
 
@@ -541,16 +559,18 @@ class RoundContext:
             t_round = 0.0
 
         deltas, sizes = [], []
-        for i, c in enumerate(sel):
-            if not completed[i]:
-                continue
-            feats, labels, valid = self.data.client_data(int(c),
-                                                         float(drift[c]))
-            delta, n, _ = local_train(self.runtime, self.params, feats,
-                                      labels, valid, cfg.local_steps,
-                                      self.rng)
-            deltas.append(delta)
-            sizes.append(n)
+        with obs.span("local_train", cat="client", round=rnd,
+                      n_completed=int(completed.sum())):
+            for i, c in enumerate(sel):
+                if not completed[i]:
+                    continue
+                feats, labels, valid = self.data.client_data(int(c),
+                                                             float(drift[c]))
+                delta, n, _ = local_train(self.runtime, self.params, feats,
+                                          labels, valid, cfg.local_steps,
+                                          self.rng)
+                deltas.append(delta)
+                sizes.append(n)
         self.params = fedavg(self.params, deltas, sizes)
         if sel.size and not completed.any():
             self.dropped_rounds += 1
@@ -564,7 +584,8 @@ class RoundContext:
 
         self.sim_time += t_round
         if rnd % cfg.eval_every == 0 or rnd == cfg.rounds - 1:
-            self._acc = float(self.evaluate(self.params))
+            with obs.span("evaluate", round=rnd):
+                self._acc = float(self.evaluate(self.params))
         h = self.history
         h["round"].append(rnd)
         h["acc"].append(self._acc)
@@ -578,17 +599,26 @@ class RoundContext:
         h["n_active"].append(int(plan.active.sum()))
         h["n_joined"].append(int(plan.joined.size))
         h["n_departed"].append(int(plan.departed.size))
-        h["server_scan_s"].append(self._scan_s)
-        h["server_cluster_s"].append(self._cluster_s)
-        h["server_drain_s"].append(self._drain_s)
+        h["server_scan_s"].append(self._meters["scan"])
+        h["server_cluster_s"].append(self._meters["cluster"])
+        h["server_drain_s"].append(self._meters["drain"])
         h["overhead_critical_s"].append(critical_s)
         h["snapshot_version"].append(snapshot_version)
         h["snapshot_age"].append(snapshot_age)
+        # lifetime per-round distributions (reported as p50/p99/p999 in
+        # history["metrics"] and by benchmarks/bench_server.py)
+        self.metrics.histogram("server/critical_s").record(critical_s)
+        self.metrics.gauge("server/snapshot_age").set(snapshot_age)
+        self.metrics.histogram("server/snapshot_age_rounds",
+                               lo=0.5, hi=1e4, per_decade=16) \
+            .record(max(snapshot_age, 0))
+        obs.counter_sample("snapshot_age", snapshot_age)
+        obs.counter_sample("accuracy", self._acc)
 
     def round_overhead_s(self) -> float:
         """This round's server-side wall seconds so far (scan + cluster +
         ingest scatter) — the sync server's critical-path charge."""
-        return self._scan_s + self._cluster_s + self._drain_s
+        return self._meters.round_total()
 
     def finish(self) -> dict:
         h = self.history
@@ -596,6 +626,11 @@ class RoundContext:
         h["params"] = self.params
         h["dropped_rounds"] = self.dropped_rounds
         h["scenario"] = self.scenario.to_config()
+        # roll the per-run registry up into the process observer (when
+        # one is live) and expose the snapshot; added here — never during
+        # rounds — so checkpoint restore sees a stable history key set
+        obs.metrics().merge(self.metrics)
+        h["metrics"] = self.metrics.snapshot()
         if self.maintainer is not None:
             h["online_cluster"] = {"full_fits": self.maintainer.full_fits,
                                    "reseeds": self.maintainer.reseeds}
@@ -620,7 +655,8 @@ def _drive_sync(ctx: RoundContext, session=None, faults=None,
         nonlocal seq
         if faults is not None:
             faults.maybe_crash(rnd, stage)
-        out = fn()
+        with obs.span(stage.name.lower(), cat="stage", round=rnd):
+            out = fn()
         if session is not None:
             session.log_event(rnd, int(stage), seq, stage.name.lower())
         seq += 1

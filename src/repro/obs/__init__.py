@@ -1,0 +1,177 @@
+"""Unified telemetry subsystem (DESIGN.md §10): stage tracing, metric
+registry, percentile histograms, Perfetto export.
+
+One process-local **observer** — a ``(tracer, metrics)`` pair — is
+either the disabled null object (the default: every hook is a no-op and
+stays off the clocks the paper measures) or a live one installed with
+``enable()`` / the ``observe()`` context manager:
+
+    import repro.obs as obs
+
+    with obs.observe(trace_path="trace.json",
+                     metrics_path="metrics.jsonl") as ob:
+        history = run_federated(data, cfg, scenario=sc)
+    # trace.json loads in https://ui.perfetto.dev; metrics.jsonl has one
+    # JSON record per counter/gauge/histogram (exact p50/p99/p999).
+
+Instrumented code never holds the observer: it calls the module-level
+``span`` / ``instant`` / ``metrics`` helpers, which read the *current*
+observer at call time, so enabling observability is one call with no
+plumbing.  ``kernel_span`` additionally opens a ``jax.profiler``
+``TraceAnnotation`` around accelerator dispatches when the observer was
+enabled with ``kernel_profile=True`` — the annotations show up inside
+XLA device traces captured with ``jax.profiler.trace``.
+"""
+from __future__ import annotations
+
+import contextlib
+
+from repro.obs.metrics import (  # noqa: F401
+    Counter,
+    Gauge,
+    Histogram,
+    MetricRegistry,
+    NULL_REGISTRY,
+    NullMetricRegistry,
+    StageMeters,
+)
+from repro.obs.trace import (  # noqa: F401
+    LANE_BACKGROUND,
+    LANE_CRITICAL,
+    NULL_SPAN,
+    NULL_TRACER,
+    NullTracer,
+    Span,
+    Tracer,
+)
+from repro.obs import export  # noqa: F401
+
+
+class Observer:
+    """A tracer + metric registry pair; ``enabled`` reflects the tracer."""
+
+    __slots__ = ("tracer", "metrics", "kernel_profile")
+
+    def __init__(self, tracer=None, metrics=None,
+                 kernel_profile: bool = False):
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics if metrics is not None else NULL_REGISTRY
+        self.kernel_profile = bool(kernel_profile)
+
+    @property
+    def enabled(self) -> bool:
+        return self.tracer.enabled
+
+
+DISABLED = Observer()
+_current = DISABLED
+
+
+def current() -> Observer:
+    """The process-local observer (the disabled null one by default)."""
+    return _current
+
+
+def enable(kernel_profile: bool = False) -> Observer:
+    """Install (and return) a fresh live observer."""
+    global _current
+    _current = Observer(Tracer(), MetricRegistry(),
+                        kernel_profile=kernel_profile)
+    return _current
+
+
+def disable() -> Observer:
+    """Restore the disabled default; returns the observer that was live
+    (its tracer/metrics stay readable for export)."""
+    global _current
+    was = _current
+    _current = DISABLED
+    return was
+
+
+@contextlib.contextmanager
+def observe(trace_path: str | None = None, metrics_path: str | None = None,
+            kernel_profile: bool = False):
+    """Scoped observability: enable on entry; on exit restore the
+    disabled default and write the requested artifacts (Chrome trace
+    JSON for Perfetto, metrics JSONL)."""
+    ob = enable(kernel_profile=kernel_profile)
+    try:
+        yield ob
+    finally:
+        disable()
+        if trace_path is not None:
+            export.write_trace(ob.tracer, trace_path)
+        if metrics_path is not None:
+            export.write_metrics_jsonl(ob.metrics, metrics_path)
+
+
+# ---------------------------------------------------------------------------
+# hook helpers — read the current observer at call time
+
+
+def span(name: str, cat: str = "server", lane: int = LANE_CRITICAL,
+         **args):
+    """A span on the current tracer (the shared no-op when disabled)."""
+    return _current.tracer.span(name, cat=cat, lane=lane, **args)
+
+
+def instant(name: str, cat: str = "server", lane: int = LANE_CRITICAL,
+            **args) -> None:
+    _current.tracer.instant(name, cat=cat, lane=lane, **args)
+
+
+def counter_sample(name: str, value: float) -> None:
+    _current.tracer.counter(name, value)
+
+
+def metrics() -> MetricRegistry:
+    """The current metric registry (the no-op null one when disabled)."""
+    return _current.metrics
+
+
+def enabled() -> bool:
+    return _current.enabled
+
+
+class _AnnotatedSpan:
+    """A tracer span + a ``jax.profiler.TraceAnnotation`` entered
+    together — the host-side span and the device-trace annotation cover
+    the same dispatch."""
+
+    __slots__ = ("_span", "_ann")
+
+    def __init__(self, sp, ann):
+        self._span = sp
+        self._ann = ann
+
+    def __enter__(self):
+        self._span.__enter__()
+        self._ann.__enter__()
+        return self._span
+
+    def __exit__(self, exc_type, exc, tb):
+        self._ann.__exit__(exc_type, exc, tb)
+        self._span.__exit__(exc_type, exc, tb)
+
+    def annotate(self, **kw) -> None:
+        self._span.annotate(**kw)
+
+
+def kernel_span(name: str, **args):
+    """Span around an accelerator dispatch.  With ``kernel_profile``
+    enabled, additionally annotates the XLA device timeline via
+    ``jax.profiler.TraceAnnotation`` (visible in traces captured with
+    ``jax.profiler.trace``); otherwise it is a plain host span — and the
+    shared no-op when observability is off."""
+    ob = _current
+    if not ob.enabled:
+        return NULL_SPAN
+    sp = ob.tracer.span(name, cat="kernel", **args)
+    if ob.kernel_profile:
+        try:
+            from jax.profiler import TraceAnnotation
+        except ImportError:          # profiler unavailable: host span only
+            return sp
+        return _AnnotatedSpan(sp, TraceAnnotation(name))
+    return sp

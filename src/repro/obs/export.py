@@ -1,0 +1,130 @@
+"""Telemetry sinks + validators (DESIGN.md §10).
+
+Two on-disk artifact formats, both plain text so CI can upload them and
+a human can read them:
+
+  * **Chrome trace JSON** (``write_trace``) — the tracer's event list
+    wrapped as ``{"traceEvents": [...]}``; drag-and-drop into
+    https://ui.perfetto.dev or ``chrome://tracing``.
+  * **Metrics JSONL** (``write_metrics_jsonl``) — one JSON record per
+    metric (``{"name", "kind", ...snapshot fields}``), greppable and
+    trivially diffable across runs.
+
+``validate_chrome_trace`` is the programmatic half of the "loads in
+Perfetto" acceptance claim: it checks the object shape, event field
+types, and that complete spans nest properly by time containment within
+each ``(pid, tid)`` lane — partial overlap between two spans on one
+lane is exactly the malformation that renders as garbage in a trace
+viewer, so it is an error here.  Used by ``tests/test_obs.py`` and the
+CI artifact step.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+
+
+def metrics_records(registry) -> list[dict]:
+    """``{"name": ..., "kind": ..., ...}`` record per metric, sorted by
+    name (JSONL line order is deterministic)."""
+    out = []
+    for name, snap in registry.snapshot().items():
+        rec = {"name": name}
+        rec.update(snap)
+        out.append(rec)
+    return out
+
+
+def _json_sane(obj):
+    """NaN/inf -> None so the artifact is strict-JSON parseable
+    everywhere (python's default emits bare ``NaN``, which Perfetto and
+    jq both reject)."""
+    if isinstance(obj, float) and not math.isfinite(obj):
+        return None
+    if isinstance(obj, dict):
+        return {k: _json_sane(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_json_sane(v) for v in obj]
+    return obj
+
+
+def write_metrics_jsonl(registry, path: str) -> int:
+    """One metric per line; returns the number of records written."""
+    records = metrics_records(registry)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        for rec in records:
+            f.write(json.dumps(_json_sane(rec), separators=(",", ":"),
+                               allow_nan=False) + "\n")
+    return len(records)
+
+
+def read_metrics_jsonl(path: str) -> list[dict]:
+    with open(path) as f:
+        return [json.loads(line) for line in f if line.strip()]
+
+
+def write_trace(tracer, path: str) -> int:
+    """Write the Perfetto-loadable trace; returns the event count."""
+    trace = tracer.chrome_trace()
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(_json_sane(trace), f, separators=(",", ":"),
+                  allow_nan=False)
+    return len(trace["traceEvents"])
+
+
+# ---------------------------------------------------------------------------
+# validation
+
+
+_REQUIRED = {"name", "ph", "ts", "pid", "tid"}
+
+
+def validate_chrome_trace(trace: dict) -> list[str]:
+    """Structural validity errors for a Chrome trace-event object (empty
+    list = valid).  Checks the shapes Perfetto's importer requires plus
+    proper span nesting per lane."""
+    errors: list[str] = []
+    events = trace.get("traceEvents")
+    if not isinstance(events, list):
+        return ["traceEvents is not a list"]
+    complete: dict[tuple, list] = {}
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            errors.append(f"event {i} is not an object")
+            continue
+        if ev.get("ph") == "M":          # metadata events carry no ts
+            if "name" not in ev or "pid" not in ev:
+                errors.append(f"metadata event {i} missing name/pid")
+            continue
+        missing = _REQUIRED - set(ev)
+        if missing:
+            errors.append(f"event {i} ({ev.get('name')!r}) missing "
+                          f"{sorted(missing)}")
+            continue
+        if not isinstance(ev["ts"], (int, float)) or ev["ts"] < 0:
+            errors.append(f"event {i} ({ev['name']!r}) bad ts {ev['ts']!r}")
+        if ev["ph"] == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                errors.append(f"span {i} ({ev['name']!r}) bad dur {dur!r}")
+                continue
+            complete.setdefault((ev["pid"], ev["tid"]), []).append(
+                (float(ev["ts"]), float(ev["ts"]) + float(dur), ev["name"]))
+    # nesting: within a lane, any two spans must be disjoint or contained
+    for lane, spans in complete.items():
+        spans.sort(key=lambda s: (s[0], -s[1]))
+        stack: list[tuple] = []
+        for start, end, name in spans:
+            while stack and start >= stack[-1][1]:
+                stack.pop()
+            if stack and end > stack[-1][1] + 1e-6:
+                errors.append(
+                    f"lane {lane}: span {name!r} [{start:.1f}, {end:.1f}] "
+                    f"overlaps {stack[-1][2]!r} ending {stack[-1][1]:.1f} "
+                    f"without nesting")
+                continue
+            stack.append((start, end, name))
+    return errors

@@ -1,0 +1,364 @@
+"""Process-local metric registry (DESIGN.md §10).
+
+Three instrument kinds, all deterministic in structure and all cheap
+enough to stay on while the paper's clocks run:
+
+  * ``Counter``  — monotonically increasing float/int accumulator;
+  * ``Gauge``    — last-written value (plus a running max, so bounds
+    like ``snapshot_age <= snapshot_max_age`` are checkable after the
+    fact without keeping a series);
+  * ``Histogram`` — fixed-bucket *log-scale* latency histogram.  Buckets
+    are laid out geometrically (``per_decade`` buckets per power of ten
+    between ``lo`` and ``hi``), so a recorded value lands in its bucket
+    with one ``log10`` and two clamps — no allocation, no resize, and a
+    relative quantile resolution of ``10^(1/per_decade) - 1`` (~3.7 % at
+    the default 64/decade).  Exact ``min``/``max``/``sum`` ride along,
+    and reported percentiles are clamped into ``[min, max]`` so the
+    tails are exact at the extremes.
+
+Everything is **mergeable**: counters add, histograms add bucket-wise
+(the same algebra as the count-min sketches in ``stream/sketch.py`` —
+the merge of two shards' histograms is the histogram of the union of
+their samples, exactly), gauges take the donor's latest value and the
+max of the two maxima.  That is what lets per-shard / per-run registries
+combine into one fleet view (``MetricRegistry.merge``).
+
+The null registry (``NULL_REGISTRY``) hands out one shared no-op
+instrument: code can unconditionally write metrics through
+``repro.obs.metrics()`` and pay one attribute call when observability is
+off.
+"""
+from __future__ import annotations
+
+import math
+
+
+class Counter:
+    """Monotonic accumulator.  ``inc`` with a negative value is a bug in
+    the caller and raises (a counter that can go down is a gauge)."""
+
+    __slots__ = ("name", "value")
+    kind = "counter"
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0.0
+
+    def inc(self, n: float = 1.0) -> None:
+        if n < 0:
+            raise ValueError(f"counter {self.name!r} cannot decrease")
+        self.value += n
+
+    def merge(self, other: "Counter") -> None:
+        self.value += other.value
+
+    def snapshot(self) -> dict:
+        return {"kind": "counter", "value": self.value}
+
+
+class Gauge:
+    """Last-written value with a running max (and whether it was ever
+    set — an unset gauge reports NaN, not a misleading 0)."""
+
+    __slots__ = ("name", "value", "max", "writes")
+    kind = "gauge"
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = float("nan")
+        self.max = float("nan")
+        self.writes = 0
+
+    def set(self, v: float) -> None:
+        v = float(v)
+        self.value = v
+        if not (self.max >= v):          # NaN-safe first write
+            self.max = v
+        self.writes += 1
+
+    def merge(self, other: "Gauge") -> None:
+        if other.writes:
+            self.value = other.value
+            if not (self.max >= other.max):
+                self.max = other.max
+            self.writes += other.writes
+
+    def snapshot(self) -> dict:
+        return {"kind": "gauge", "value": self.value, "max": self.max,
+                "writes": self.writes}
+
+
+class Histogram:
+    """Fixed-bucket log-scale histogram with exact min/max/sum.
+
+    Bucket ``0`` is the underflow bin (``v <= lo``), the last bucket is
+    the overflow bin (``v > hi``); in between, bucket upper edges are
+    ``lo * 10^(i / per_decade)``.  Merging adds bucket counts — two
+    histograms with the same layout merge into exactly the histogram of
+    the combined sample stream.
+    """
+
+    __slots__ = ("name", "lo", "hi", "per_decade", "counts", "count",
+                 "sum", "min", "max", "_n_buckets", "_scale")
+    kind = "histogram"
+
+    def __init__(self, name: str, lo: float = 1e-7, hi: float = 1e3,
+                 per_decade: int = 64):
+        if not (0 < lo < hi) or per_decade < 1:
+            raise ValueError(f"bad histogram layout ({lo}, {hi}, "
+                             f"{per_decade})")
+        self.name = name
+        self.lo = float(lo)
+        self.hi = float(hi)
+        self.per_decade = int(per_decade)
+        decades = math.log10(hi / lo)
+        self._n_buckets = int(math.ceil(decades * per_decade)) + 2
+        self._scale = per_decade / math.log(10.0)
+        self.counts = [0] * self._n_buckets
+        self.count = 0
+        self.sum = 0.0
+        self.min = float("inf")
+        self.max = float("-inf")
+
+    # -- recording -----------------------------------------------------
+
+    def record(self, v: float) -> None:
+        v = float(v)
+        self.count += 1
+        self.sum += v
+        if v < self.min:
+            self.min = v
+        if v > self.max:
+            self.max = v
+        if v <= self.lo:
+            i = 0
+        else:
+            i = 1 + int(self._scale * math.log(v / self.lo))
+            if i >= self._n_buckets:
+                i = self._n_buckets - 1
+        self.counts[i] += 1
+
+    # -- reading -------------------------------------------------------
+
+    def bucket_upper(self, i: int) -> float:
+        """Upper edge of bucket ``i`` (``lo`` for the underflow bin,
+        ``+inf`` for the overflow bin)."""
+        if i <= 0:
+            return self.lo
+        if i >= self._n_buckets - 1:
+            return float("inf")
+        return self.lo * 10.0 ** (i / self.per_decade)
+
+    def percentile(self, q: float) -> float:
+        """The q-th percentile (0 < q <= 100): the upper edge of the
+        bucket holding the ceil(q% · count)-th smallest sample, clamped
+        into the exact observed ``[min, max]``.  Deterministic, and
+        stable under merges (rank math over bucket counts only)."""
+        if self.count == 0:
+            return float("nan")
+        rank = max(1, int(math.ceil(q / 100.0 * self.count)))
+        acc = 0
+        for i, c in enumerate(self.counts):
+            acc += c
+            if acc >= rank:
+                return float(min(max(self.bucket_upper(i), self.min),
+                                 self.max))
+        return self.max
+
+    def percentiles(self) -> dict:
+        return {"p50": self.percentile(50.0),
+                "p99": self.percentile(99.0),
+                "p999": self.percentile(99.9)}
+
+    @property
+    def mean(self) -> float:
+        return self.sum / self.count if self.count else float("nan")
+
+    # -- algebra -------------------------------------------------------
+
+    def merge(self, other: "Histogram") -> None:
+        if (other.lo, other.hi, other.per_decade) != \
+                (self.lo, self.hi, self.per_decade):
+            raise ValueError(
+                f"histogram {self.name!r}: merging incompatible layouts "
+                f"({self.lo},{self.hi},{self.per_decade}) vs "
+                f"({other.lo},{other.hi},{other.per_decade})")
+        for i, c in enumerate(other.counts):
+            self.counts[i] += c
+        self.count += other.count
+        self.sum += other.sum
+        self.min = min(self.min, other.min)
+        self.max = max(self.max, other.max)
+
+    def snapshot(self) -> dict:
+        out = {"kind": "histogram", "count": self.count, "sum": self.sum,
+               "mean": self.mean,
+               "min": self.min if self.count else float("nan"),
+               "max": self.max if self.count else float("nan"),
+               "layout": {"lo": self.lo, "hi": self.hi,
+                          "per_decade": self.per_decade}}
+        out.update(self.percentiles())
+        return out
+
+
+class MetricRegistry:
+    """Process-local named-instrument store.
+
+    ``counter``/``gauge``/``histogram`` get-or-create by name; asking
+    for an existing name with a different kind fails loudly (two call
+    sites disagreeing about an instrument is a bug, not a merge).
+    """
+
+    enabled = True
+
+    def __init__(self):
+        self._metrics: dict[str, object] = {}
+
+    def _get(self, name: str, cls, *args, **kw):
+        m = self._metrics.get(name)
+        if m is None:
+            m = self._metrics[name] = cls(name, *args, **kw)
+        elif not isinstance(m, cls):
+            raise TypeError(f"metric {name!r} is a {m.kind}, not a "
+                            f"{cls.kind}")
+        return m
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge)
+
+    def histogram(self, name: str, lo: float = 1e-7, hi: float = 1e3,
+                  per_decade: int = 64) -> Histogram:
+        return self._get(name, Histogram, lo, hi, per_decade)
+
+    def get(self, name: str):
+        return self._metrics.get(name)
+
+    def names(self) -> list[str]:
+        return sorted(self._metrics)
+
+    def merge(self, other: "MetricRegistry") -> None:
+        """Fold another registry in (shard/run roll-up): same-name
+        instruments merge by their own algebra, new names are adopted
+        (by reference — donors are normally discarded after a merge)."""
+        for name in other.names():
+            theirs = other._metrics[name]
+            ours = self._metrics.get(name)
+            if ours is None:
+                self._metrics[name] = theirs
+            else:
+                if type(ours) is not type(theirs):
+                    raise TypeError(
+                        f"metric {name!r}: cannot merge {theirs.kind} "
+                        f"into {ours.kind}")
+                ours.merge(theirs)
+
+    def snapshot(self) -> dict:
+        """JSON-able ``{name: instrument snapshot}`` view (histograms
+        report count/sum/min/max/mean and p50/p99/p999)."""
+        return {name: self._metrics[name].snapshot()
+                for name in self.names()}
+
+
+class _NullInstrument:
+    """The shared do-nothing instrument the null registry hands out."""
+
+    __slots__ = ()
+    name = "<null>"
+    kind = "null"
+    value = 0.0
+    max = float("nan")
+    count = 0
+    sum = 0.0
+
+    def inc(self, n: float = 1.0) -> None:
+        pass
+
+    def set(self, v: float) -> None:
+        pass
+
+    def record(self, v: float) -> None:
+        pass
+
+    def merge(self, other) -> None:
+        pass
+
+    def percentile(self, q: float) -> float:
+        return float("nan")
+
+    def percentiles(self) -> dict:
+        return {}
+
+    def snapshot(self) -> dict:
+        return {}
+
+
+_NULL_INSTRUMENT = _NullInstrument()
+
+
+class NullMetricRegistry(MetricRegistry):
+    """Disabled registry: every instrument is the shared no-op, nothing
+    is stored — the cost of a metric write is one method call."""
+
+    enabled = False
+
+    def counter(self, name: str):
+        return _NULL_INSTRUMENT
+
+    def gauge(self, name: str):
+        return _NULL_INSTRUMENT
+
+    def histogram(self, name: str, lo: float = 1e-7, hi: float = 1e3,
+                  per_decade: int = 64):
+        return _NULL_INSTRUMENT
+
+    def merge(self, other) -> None:
+        pass
+
+    def snapshot(self) -> dict:
+        return {}
+
+
+NULL_REGISTRY = NullMetricRegistry()
+
+
+class StageMeters:
+    """Per-round stage-seconds meters whose lifetime view lives in a
+    ``MetricRegistry``.
+
+    The round loop's ``history["server_*_s"]`` keys are *views* over
+    this object: each measured interval is charged once — into the
+    current round's accumulator (read by ``history``) and into the
+    registry's per-stage latency histogram (read by ``snapshot()`` /
+    percentiles / JSONL export).  ``reset()`` starts a new round; the
+    per-round float accumulation order is identical to the old ad-hoc
+    ``self._scan_s += dt`` meters, so the emitted history values are
+    bit-for-bit what they were before the registry existed.
+    """
+
+    __slots__ = ("_registry", "_prefix", "_round")
+
+    def __init__(self, registry: MetricRegistry, stages: tuple,
+                 prefix: str = "server/"):
+        self._registry = registry
+        self._prefix = prefix
+        self._round = {s: 0.0 for s in stages}
+        for s in stages:
+            registry.histogram(f"{prefix}{s}_s")
+
+    def reset(self) -> None:
+        for s in self._round:
+            self._round[s] = 0.0
+
+    def add(self, stage: str, dt: float) -> None:
+        self._round[stage] += dt
+        self._registry.histogram(f"{self._prefix}{stage}_s").record(dt)
+
+    def __getitem__(self, stage: str) -> float:
+        """This round's accumulated seconds for ``stage``."""
+        return self._round[stage]
+
+    def round_total(self) -> float:
+        return sum(self._round.values())

@@ -36,6 +36,7 @@ registry × clustering backends.
 """
 from __future__ import annotations
 
+import repro.obs as obs
 from repro.checkpoint.server_state import (
     context_state, restore_server, server_state,
 )
@@ -77,6 +78,8 @@ def drive_async(ctx, session=None, faults=None, start_round: int = 0,
     state: dict[int, dict] = {}   # per-round pipeline state, keyed by round
 
     def schedule_round(rnd: int) -> None:
+        obs.counter_sample("event_queue_depth", len(queue))
+        obs.counter_sample("ingest_in_flight", len(ingest_q))
         queue.push(rnd, Stage.MEMBERSHIP, "membership", rnd)
         queue.push(rnd, Stage.DRAIN, "drain", rnd)
         queue.push(rnd, Stage.SCAN, "scan", rnd)
@@ -103,6 +106,9 @@ def drive_async(ctx, session=None, faults=None, start_round: int = 0,
                 # out of the in-flight dedup set and the next drift scan
                 # re-issues them (degradation, not failure)
                 faults.lost_batches += 1
+                obs.instant("ingest/batch_lost", cat="ingest",
+                            round=ev.payload, retries=batch.retries)
+                ctx.metrics.counter("server/ingest/lost_batches").inc()
                 if batch.retries < faults.plan.max_retries:
                     redo = ingest_q.requeue(
                         batch,

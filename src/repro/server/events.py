@@ -23,6 +23,8 @@ import enum
 import heapq
 from typing import Any, Callable
 
+import repro.obs as obs
+
 
 class Stage(enum.IntEnum):
     """Fixed intra-round ordering of the server pipeline."""
@@ -99,6 +101,7 @@ class EventQueue:
         runs once the handler returned (durable-log append / checkpoint
         hooks): an event is only logged as executed when it finished.
         """
+        tracer = obs.current().tracer   # bound once per pump, read hot
         n = 0
         while self._heap:
             if before is not None:
@@ -110,7 +113,12 @@ class EventQueue:
                 raise KeyError(f"no handler for event kind {ev.kind!r} "
                                f"at round {ev.round_idx} stage "
                                f"{ev.stage.name}") from None
-            handler(ev)
+            if tracer.enabled:
+                with tracer.span("event/" + ev.kind, cat="event",
+                                 round=ev.round_idx, stage=ev.stage.name):
+                    handler(ev)
+            else:
+                handler(ev)
             if after is not None:
                 after(ev)
             n += 1

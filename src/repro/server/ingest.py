@@ -27,6 +27,8 @@ import dataclasses
 
 import numpy as np
 
+import repro.obs as obs
+
 
 @dataclasses.dataclass(frozen=True)
 class SummaryBatch:
@@ -67,6 +69,12 @@ class IngestQueue:
             fresh_rows={c: np.asarray(fresh[c]) for c in summaries})
         self._pending.append(batch)
         self.enqueued_batches += 1
+        obs.instant("ingest/enqueue", cat="ingest", batch=len(batch),
+                    compute_round=batch.compute_round,
+                    ready_round=batch.ready_round)
+        m = obs.metrics()
+        m.counter("server/ingest/enqueued_batches").inc()
+        m.counter("server/ingest/enqueued_summaries").inc(len(batch))
         return batch
 
     def pop_ready(self, round_idx: int) -> list[SummaryBatch]:
@@ -76,6 +84,15 @@ class IngestQueue:
             self._pending = [b for b in self._pending
                              if b.ready_round > round_idx]
             self.drained_batches += len(ready)
+            obs.instant("ingest/drain", cat="ingest", round=round_idx,
+                        batches=len(ready),
+                        in_flight=len(self._pending))
+            m = obs.metrics()
+            m.counter("server/ingest/drained_batches").inc(len(ready))
+            for b in ready:
+                m.histogram("server/ingest/latency_rounds",
+                            lo=0.5, hi=1e4, per_decade=16) \
+                    .record(round_idx - b.compute_round)
         return ready
 
     def requeue(self, batch: SummaryBatch, ready_round: int) -> SummaryBatch:
@@ -87,6 +104,9 @@ class IngestQueue:
                                    retries=batch.retries + 1)
         self._pending.append(redo)
         self.requeued_batches += 1
+        obs.instant("ingest/requeue", cat="ingest", batch=len(redo),
+                    retries=redo.retries, ready_round=redo.ready_round)
+        obs.metrics().counter("server/ingest/requeued_batches").inc()
         return redo
 
     def in_flight(self) -> set:

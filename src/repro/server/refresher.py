@@ -26,6 +26,7 @@ import dataclasses
 
 import numpy as np
 
+import repro.obs as obs
 from repro.server.snapshot import RegistrySnapshot, SnapshotStore, capture
 
 
@@ -95,6 +96,7 @@ class ClusterRefresher:
             dt = self.ctx.recluster_now(rnd, plan.active, drifted)
         else:
             self.skipped_empty += 1
+            self.ctx.metrics.counter("server/refresh/skipped_empty").inc()
             dt = 0.0
         self._version += 1
         snap = capture(self._version, rnd, self.ctx.registry,
@@ -116,6 +118,7 @@ class ClusterRefresher:
         if not ctx.uses_summaries:
             return 0.0, None
 
+        m = ctx.metrics
         if self.mode == "sync":
             blocking = 0.0
             # nonzero ingest latency can leave the registry empty on the
@@ -127,6 +130,7 @@ class ClusterRefresher:
                 blocking = ctx.recluster_now(rnd, plan.active,
                                              ctx.sync_drifted(plan, stale))
                 self.blocking_builds += 1
+                m.counter("server/refresh/sync_builds").inc()
             # republish every round: selection must read exactly the live
             # registry/clustering state, as the sync loop does
             self._version += 1
@@ -140,16 +144,26 @@ class ClusterRefresher:
         mass = len(self._pending_ids) / live
         drifted = np.asarray(sorted(self._pending_ids), np.int64)
         age = self.store.latest().age(rnd)
+        m.gauge("server/refresh/age_at_decision").set(age)
         if age >= self.policy.max_snapshot_age:
             # the bound would be violated at selection: rebuild NOW, on
             # the critical path — staleness is guaranteed, not best-effort
-            snap, dt = self._build(rnd, plan, mass, drifted)
-            self.store.publish(snap)
+            with obs.span("blocking_rebuild", cat="refresh", round=rnd,
+                          age=age, drift_mass=mass):
+                snap, dt = self._build(rnd, plan, mass, drifted)
+                self.store.publish(snap)
             self.blocking_builds += 1
+            m.counter("server/refresh/blocking").inc()
+            m.histogram("server/refresh/blocking_build_s").record(dt)
             return dt, None
         if mass >= self.policy.drift_mass_trigger:
-            snap, dt = self._build(rnd, plan, mass, drifted)
+            with obs.span("background_rebuild", cat="refresh",
+                          lane=obs.LANE_BACKGROUND, round=rnd,
+                          age=age, drift_mass=mass):
+                snap, dt = self._build(rnd, plan, mass, drifted)
             self.background_builds += 1
             self.background_s += dt
+            m.counter("server/refresh/background").inc()
+            m.histogram("server/refresh/background_build_s").record(dt)
             return 0.0, snap
         return 0.0, None

@@ -22,6 +22,8 @@ import dataclasses
 
 import numpy as np
 
+import repro.obs as obs
+
 
 def _frozen(a: np.ndarray) -> np.ndarray:
     """A read-only copy — snapshot fields must never alias live server
@@ -86,3 +88,7 @@ class SnapshotStore:
                 f"after v{self._latest.version}")
         self._latest = snap
         self.published += 1
+        obs.instant("snapshot/publish", cat="snapshot", version=snap.version,
+                    round=snap.round_idx, drift_mass=snap.drift_mass)
+        obs.counter_sample("snapshot_version", snap.version)
+        obs.metrics().counter("server/snapshots_published").inc()

@@ -31,6 +31,7 @@ differential harness.
 from __future__ import annotations
 
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
@@ -38,8 +39,10 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+import repro.obs as obs
 from repro.core.scheduler import RefreshPolicy, batch_sym_kl
 from repro.stream.registry import StreamingSummaryRegistry
+from repro.utils.roofline import drift_scan_bytes, record_bandwidth
 from repro.utils.sharding import FLEET_RULES, fleet_mesh, make_spec
 
 
@@ -105,20 +108,31 @@ class ShardedSummaryRegistry(StreamingSummaryRegistry):
         out = np.empty(n, np.float32)
         rows = self.chunk_rows
         pad_p = pad_q = None
-        for start in range(0, n, rows):
-            stop = min(start + rows, n)
-            m = stop - start
-            if m == rows:
-                d = scan(self.label_dists[start:stop], fresh[start:stop])
-            else:                       # tail chunk: zero-pad to shape
-                if pad_p is None:
-                    pad_p = np.zeros((rows, c), np.float32)
-                    pad_q = np.zeros((rows, c), np.float32)
-                pad_p[:m] = self.label_dists[start:stop]
-                pad_q[:m] = fresh[start:stop]
-                d = scan(pad_p, pad_q)
-            out[start:stop] = np.asarray(d)[:m]
-            self.scan_chunks += 1
+        observed = obs.enabled()
+        t_scan = time.perf_counter() if observed else 0.0
+        with obs.kernel_span("drift_scan", rows=n, classes=c,
+                             n_shards=self.n_shards,
+                             chunk_rows=rows) as sp:
+            for start in range(0, n, rows):
+                stop = min(start + rows, n)
+                m = stop - start
+                if m == rows:
+                    d = scan(self.label_dists[start:stop], fresh[start:stop])
+                else:                       # tail chunk: zero-pad to shape
+                    if pad_p is None:
+                        pad_p = np.zeros((rows, c), np.float32)
+                        pad_q = np.zeros((rows, c), np.float32)
+                    pad_p[:m] = self.label_dists[start:stop]
+                    pad_q[:m] = fresh[start:stop]
+                    d = scan(pad_p, pad_q)
+                out[start:stop] = np.asarray(d)[:m]
+                self.scan_chunks += 1
+            sp.annotate(chunks=-(-n // rows))
+        if observed:
+            # achieved vs roofline-predicted scan bandwidth (gauges)
+            record_bandwidth(obs.metrics(), "kernel/drift_scan",
+                             drift_scan_bytes(n, c),
+                             time.perf_counter() - t_scan)
         # borderline band: device libm may differ from numpy by ~1 ulp, so
         # rows near the threshold are re-decided with the exact baseline
         # math — decisions match the streaming registry on any mesh

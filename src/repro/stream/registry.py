@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import numpy as np
 
+import repro.obs as obs
 from repro.core.scheduler import RefreshPolicy, batch_sym_kl, sym_kl
 
 
@@ -120,6 +121,7 @@ class StreamingSummaryRegistry:
         self.has_summary[ids] = True
         self.refresh_count += ids.size
         self.version += 1
+        obs.metrics().counter("registry/scatter_rows").inc(int(ids.size))
 
     def update(self, client: int, round_idx: int, summary: np.ndarray,
                label_dist: np.ndarray) -> None:
@@ -133,6 +135,7 @@ class StreamingSummaryRegistry:
         self.has_summary[client] = False
         self.last_refresh[client] = -(10 ** 9)
         self.version += 1
+        obs.metrics().counter("registry/evictions").inc()
         if self.summaries is not None:
             self.summaries[client] = 0.0
         if self.label_dists is not None:

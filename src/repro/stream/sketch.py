@@ -27,6 +27,7 @@ import functools
 
 import numpy as np
 
+import repro.obs as obs
 from repro.kernels.sketch_update import HASH_PRIME, cm_hash_params
 
 
@@ -74,18 +75,20 @@ def cm_update_batch(labels, valid, spec: SketchSpec,
     m, n = labels.shape
     a, b = spec.hash_params
     seg = np.repeat(np.arange(m, dtype=np.int32), n)
-    if use_kernel:
-        from repro.kernels.ops import sketch_update
-        out = sketch_update(labels.reshape(-1), seg, valid.reshape(-1),
-                            m, spec.width, a, b)
-    else:
-        import jax.numpy as jnp
-
-        from repro.kernels.ref import sketch_update_ref
-        out = sketch_update_ref(jnp.asarray(labels.reshape(-1)),
-                                jnp.asarray(seg),
-                                jnp.asarray(valid.reshape(-1)),
+    with obs.kernel_span("sketch_update", clients=m, items=m * n,
+                         kernel=bool(use_kernel)):
+        if use_kernel:
+            from repro.kernels.ops import sketch_update
+            out = sketch_update(labels.reshape(-1), seg, valid.reshape(-1),
                                 m, spec.width, a, b)
+        else:
+            import jax.numpy as jnp
+
+            from repro.kernels.ref import sketch_update_ref
+            out = sketch_update_ref(jnp.asarray(labels.reshape(-1)),
+                                    jnp.asarray(seg),
+                                    jnp.asarray(valid.reshape(-1)),
+                                    m, spec.width, a, b)
     return np.asarray(out)
 
 

@@ -92,6 +92,28 @@ class Roofline:
         }
 
 
+def drift_scan_bytes(rows: int, num_classes: int,
+                     dtype_bytes: int = 4) -> float:
+    """HBM traffic of one drift-scan pass: stream the stored and fresh
+    ``[rows, C]`` label-dist arenas in, one ``[rows]`` drift column out."""
+    return float(rows) * (2.0 * num_classes + 1.0) * dtype_bytes
+
+
+def record_bandwidth(metrics, name: str, nbytes: float, seconds: float,
+                     peak_bw: float = HBM_BW) -> float:
+    """Record achieved vs roofline-predicted bandwidth for one measured
+    pass as gauges (``<name>/achieved_gbs``, ``<name>/predicted_gbs``,
+    ``<name>/efficiency``) on a metric registry; returns the achieved
+    bytes/s.  On the CPU-only container "efficiency" is a cross-check
+    number, not a target — the predicted term assumes the v5e HBM figure.
+    """
+    achieved = nbytes / seconds if seconds > 0 else float("nan")
+    metrics.gauge(f"{name}/achieved_gbs").set(achieved / 1e9)
+    metrics.gauge(f"{name}/predicted_gbs").set(peak_bw / 1e9)
+    metrics.gauge(f"{name}/efficiency").set(achieved / peak_bw)
+    return achieved
+
+
 def dense_model_flops(num_params: int, tokens: int) -> float:
     """MODEL_FLOPS = 6*N*D for a training step over D tokens."""
     return 6.0 * num_params * tokens

@@ -37,7 +37,8 @@ def test_only_known_group_runs(tmp_path, capsys):
     out = os.path.join(str(tmp_path), "bench.json")
     bench_run.main(["--only", "dryrun", "--json", out])
     report = json.load(open(out))
-    assert report["schema"] == 5
+    from benchmarks._record import SCHEMA_VERSION
+    assert report["schema"] == SCHEMA_VERSION
     assert list(report["benches"]) == ["dryrun"]
     assert report["failures"] == []
 

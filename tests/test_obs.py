@@ -1,0 +1,451 @@
+"""Telemetry subsystem (DESIGN.md §10): metric algebra, trace validity,
+null-object defaults, end-to-end federation observability, and the
+refresher staleness-bound edges the new metrics make checkable.
+"""
+import json
+import math
+
+import numpy as np
+import pytest
+
+import repro.obs as obs
+from repro.data.synthetic import FederatedDataset, small_spec
+from repro.fl import FLConfig, run_federated
+from repro.obs import (
+    Counter, Gauge, Histogram, MetricRegistry, NULL_REGISTRY, NULL_SPAN,
+    StageMeters, Tracer,
+)
+from repro.obs.export import (
+    metrics_records, read_metrics_jsonl, validate_chrome_trace,
+    write_metrics_jsonl, write_trace,
+)
+from repro.utils.roofline import HBM_BW, drift_scan_bytes, record_bandwidth
+
+# the deterministic keys of the 24-seed differential pin — telemetry
+# must never move them, enabled or not.  (``sim_time`` is pinned there
+# too, but it folds in a *measured* summary wall time, so it is not
+# reproducible across two separate runs with or without telemetry.)
+TRACE_KEYS = ("selected", "completed", "refreshes", "acc", "n_active",
+              "n_joined", "n_departed", "dropped")
+
+
+def _trace(h):
+    return {k: h[k] for k in TRACE_KEYS if k in h}
+
+
+# ---------------------------------------------------------------------------
+# instruments
+
+
+def test_counter_monotonic():
+    c = Counter("x")
+    c.inc()
+    c.inc(2.5)
+    assert c.value == 3.5
+    with pytest.raises(ValueError, match="cannot decrease"):
+        c.inc(-1)
+
+
+def test_gauge_tracks_last_and_max():
+    g = Gauge("x")
+    assert math.isnan(g.value) and math.isnan(g.max)   # unset is NaN, not 0
+    for v in (3.0, 7.0, 2.0):
+        g.set(v)
+    assert g.value == 2.0 and g.max == 7.0 and g.writes == 3
+
+
+def test_histogram_exact_percentiles_within_resolution():
+    h = Histogram("lat_s")
+    samples = [1e-4 * (1 + i / 100.0) for i in range(1000)]   # 100..200us
+    for v in samples:
+        h.record(v)
+    rel = 10 ** (1.0 / h.per_decade) - 1.0      # bucket resolution
+    for q in (50.0, 99.0, 99.9):
+        exact = float(np.percentile(samples, q, method="higher"))
+        got = h.percentile(q)
+        assert exact * (1 - 1e-12) <= got <= exact * (1 + rel) * (1 + 1e-12)
+    # tails are exact at the extremes: clamped into observed [min, max]
+    assert h.min <= h.percentile(0.001) and h.percentile(100.0) == h.max
+    assert h.count == 1000 and h.mean == pytest.approx(np.mean(samples))
+
+
+def test_histogram_single_sample_and_out_of_range():
+    h = Histogram("x", lo=1e-3, hi=1.0)
+    h.record(0.05)
+    assert h.percentiles() == {"p50": 0.05, "p99": 0.05, "p999": 0.05}
+    h.record(1e-9)       # underflow bin
+    h.record(50.0)       # overflow bin
+    assert h.count == 3
+    assert h.percentile(1.0) == h.lo          # underflow bin edge
+    assert h.percentile(99.9) == 50.0         # overflow clamped to exact max
+    empty = Histogram("y")
+    assert math.isnan(empty.percentile(50.0))
+
+
+def test_histogram_merge_is_union_of_streams():
+    rs = np.random.RandomState(0)
+    a, b, u = (Histogram("s"), Histogram("s"), Histogram("s"))
+    sa, sb = rs.gamma(2.0, 1e-3, 500), rs.gamma(2.0, 5e-3, 300)
+    for v in sa:
+        a.record(v)
+        u.record(v)
+    for v in sb:
+        b.record(v)
+        u.record(v)
+    a.merge(b)
+    # merged histogram == histogram of the concatenated stream, exactly
+    assert a.counts == u.counts
+    assert a.count == u.count and a.sum == pytest.approx(u.sum)
+    assert (a.min, a.max) == (u.min, u.max)
+    assert a.percentiles() == u.percentiles()
+
+
+def test_histogram_merge_rejects_layout_mismatch():
+    a = Histogram("s")
+    b = Histogram("s", lo=1e-6)
+    with pytest.raises(ValueError, match="incompatible layouts"):
+        a.merge(b)
+
+
+# ---------------------------------------------------------------------------
+# registry
+
+
+def test_registry_kind_mismatch_fails_loudly():
+    r = MetricRegistry()
+    r.counter("x").inc()
+    with pytest.raises(TypeError, match="is a counter, not a gauge"):
+        r.gauge("x")
+    assert r.counter("x").value == 1.0        # get-or-create by name
+
+
+def test_registry_merge_rolls_up_shards():
+    a, b = MetricRegistry(), MetricRegistry()
+    a.counter("rows").inc(10)
+    b.counter("rows").inc(5)
+    b.counter("only_b").inc(2)
+    a.gauge("age").set(1.0)
+    b.gauge("age").set(4.0)
+    b.gauge("age").set(2.0)
+    a.histogram("lat_s").record(1e-3)
+    b.histogram("lat_s").record(1e-2)
+    a.merge(b)
+    assert a.counter("rows").value == 15
+    assert a.counter("only_b").value == 2
+    assert a.gauge("age").value == 2.0 and a.gauge("age").max == 4.0
+    assert a.histogram("lat_s").count == 2
+    c = MetricRegistry()
+    c.gauge("rows").set(1.0)
+    with pytest.raises(TypeError, match="cannot merge"):
+        c.merge(a)
+
+
+def test_stage_meters_round_view_and_lifetime_histograms():
+    r = MetricRegistry()
+    m = StageMeters(r, ("scan", "cluster"))
+    m.add("scan", 0.1)
+    m.add("scan", 0.2)
+    m.add("cluster", 0.5)
+    assert m["scan"] == 0.1 + 0.2             # same accumulation order
+    assert m.round_total() == (0.1 + 0.2) + 0.5
+    m.reset()
+    assert m["scan"] == 0.0
+    assert r.histogram("server/scan_s").count == 2      # lifetime view
+    assert r.histogram("server/cluster_s").count == 1
+
+
+# ---------------------------------------------------------------------------
+# null-object defaults: the disabled path everyone pays
+
+
+def test_disabled_is_the_default_and_noop():
+    assert obs.current() is obs.DISABLED
+    assert not obs.enabled()
+    assert obs.span("x", round=1) is NULL_SPAN
+    assert obs.kernel_span("k", rows=4) is NULL_SPAN
+    assert obs.metrics() is NULL_REGISTRY
+    with obs.span("x") as sp:
+        sp.annotate(n=1)                       # all no-ops, nothing raised
+    obs.instant("x", v=2)
+    obs.counter_sample("x", 3.0)
+    obs.metrics().counter("c").inc()
+    obs.metrics().gauge("g").set(1.0)
+    obs.metrics().histogram("h").record(1.0)
+    assert obs.metrics().snapshot() == {}
+    assert obs.current().tracer.events == []
+
+
+def test_observe_scopes_and_writes_artifacts(tmp_path):
+    trace_p = str(tmp_path / "trace.json")
+    metrics_p = str(tmp_path / "metrics.jsonl")
+    with obs.observe(trace_path=trace_p, metrics_path=metrics_p) as ob:
+        assert obs.current() is ob and obs.enabled()
+        with obs.span("work", cat="test", round=3) as sp:
+            sp.annotate(n=7)
+        obs.instant("mark", v=1)
+        obs.counter_sample("depth", 4.0)
+        obs.metrics().counter("c").inc(2)
+        obs.metrics().histogram("h_s").record(1e-3)
+        ks = obs.kernel_span("k", rows=8)
+        assert ks is not NULL_SPAN
+        with ks:
+            pass
+    assert obs.current() is obs.DISABLED       # restored on exit
+    trace = json.load(open(trace_p))
+    assert validate_chrome_trace(trace) == []
+    names = {ev["name"] for ev in trace["traceEvents"]}
+    assert {"work", "mark", "depth", "k"} <= names
+    span = next(ev for ev in trace["traceEvents"] if ev["name"] == "work")
+    assert span["ph"] == "X" and span["args"] == {"round": 3, "n": 7}
+    recs = {r["name"]: r for r in read_metrics_jsonl(metrics_p)}
+    assert recs["c"]["value"] == 2
+    assert recs["h_s"]["count"] == 1
+
+
+def test_metrics_jsonl_is_strict_json(tmp_path):
+    r = MetricRegistry()
+    r.gauge("unset_then_set").set(float("nan"))   # NaN must not leak
+    r.histogram("empty_s")
+    path = str(tmp_path / "m.jsonl")
+    n = write_metrics_jsonl(r, path)
+    assert n == len(metrics_records(r)) == 2
+    for line in open(path):
+        rec = json.loads(line)                    # strict JSON parses
+        assert "NaN" not in line
+        assert rec["name"]
+
+
+# ---------------------------------------------------------------------------
+# trace validation
+
+
+def _spans(tracer):
+    return [e for e in tracer.events if e["ph"] == "X"]
+
+
+def test_validate_accepts_real_tracer_output():
+    tr = Tracer()
+    with tr.span("outer", round=1):
+        with tr.span("inner"):
+            pass
+        tr.instant("tick")
+    with tr.span("bg", lane=obs.LANE_BACKGROUND):
+        pass
+    tr.counter("depth", 3)
+    assert validate_chrome_trace(tr.chrome_trace()) == []
+    assert tr.span_names() == {"outer", "inner", "bg"}
+
+
+def test_validate_rejects_malformed_traces():
+    assert validate_chrome_trace({}) == ["traceEvents is not a list"]
+    missing = {"traceEvents": [{"name": "x", "ph": "X", "ts": 0.0}]}
+    assert any("missing" in e for e in validate_chrome_trace(missing))
+    bad_dur = {"traceEvents": [
+        {"name": "x", "ph": "X", "ts": 0.0, "dur": -1.0, "pid": 1, "tid": 1}]}
+    assert any("bad dur" in e for e in validate_chrome_trace(bad_dur))
+    overlap = {"traceEvents": [
+        {"name": "a", "ph": "X", "ts": 0.0, "dur": 10.0, "pid": 1, "tid": 1},
+        {"name": "b", "ph": "X", "ts": 5.0, "dur": 10.0, "pid": 1, "tid": 1},
+    ]}
+    assert any("overlaps" in e for e in validate_chrome_trace(overlap))
+    # the same two spans on different lanes are fine
+    two_lanes = {"traceEvents": [
+        {"name": "a", "ph": "X", "ts": 0.0, "dur": 10.0, "pid": 1, "tid": 1},
+        {"name": "b", "ph": "X", "ts": 5.0, "dur": 10.0, "pid": 1, "tid": 2},
+    ]}
+    assert validate_chrome_trace(two_lanes) == []
+
+
+def test_tracer_absorb_merges_timelines():
+    a, b = Tracer(pid=1), Tracer(pid=2)
+    with a.span("x"):
+        pass
+    with b.span("y"):
+        pass
+    a.absorb(b)
+    assert {e["pid"] for e in _spans(a)} == {1, 2}
+    assert validate_chrome_trace(a.chrome_trace()) == []
+
+
+# ---------------------------------------------------------------------------
+# roofline cross-check gauges
+
+
+def test_record_bandwidth_gauges():
+    r = MetricRegistry()
+    nbytes = drift_scan_bytes(100_000, 10)
+    assert nbytes == 100_000 * 21 * 4
+    achieved = record_bandwidth(r, "kernel/drift_scan", nbytes, 1e-3)
+    assert achieved == pytest.approx(nbytes / 1e-3)
+    assert r.gauge("kernel/drift_scan/achieved_gbs").value == \
+        pytest.approx(achieved / 1e9)
+    assert r.gauge("kernel/drift_scan/predicted_gbs").value == \
+        pytest.approx(HBM_BW / 1e9)
+    assert r.gauge("kernel/drift_scan/efficiency").value == \
+        pytest.approx(achieved / HBM_BW)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end federation observability
+
+
+def _data(seed=13):
+    return FederatedDataset(small_spec(num_clients=16, num_classes=5,
+                                       side=8, avg_samples=24), seed=seed)
+
+
+def _cfg(**kw):
+    base = dict(rounds=6, clients_per_round=4, local_steps=1, summary="py",
+                registry="streaming", clustering="online", num_clusters=3,
+                refresh_max_age=3, refresh_kl=0.05, eval_every=3, seed=5)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def test_sync_federation_under_observe(tmp_path):
+    data = _data()
+    h_plain = run_federated(data, _cfg(server="sync"))
+    trace_p = str(tmp_path / "trace.json")
+    metrics_p = str(tmp_path / "m.jsonl")
+    with obs.observe(trace_path=trace_p, metrics_path=metrics_p) as ob:
+        h_obs = run_federated(data, _cfg(server="sync"))
+    # observability must not move the run: differential keys identical
+    assert _trace(h_plain) == _trace(h_obs)
+    names = ob.tracer.span_names()
+    assert {"drift_scan", "client_summaries", "registry_scatter",
+            "recluster", "select_devices", "local_train",
+            "evaluate"} <= names
+    trace = json.load(open(trace_p))
+    assert validate_chrome_trace(trace) == []
+    recs = {r["name"] for r in read_metrics_jsonl(metrics_p)}
+    assert "registry/scatter_rows" in recs
+    # history carries the metric snapshot either way (ctx-owned registry)
+    for h in (h_plain, h_obs):
+        m = h["metrics"]
+        assert m["server/scan_s"]["count"] == 6
+        assert {"p50", "p99", "p999"} <= set(m["server/critical_s"])
+
+
+def test_async_federation_under_observe(tmp_path):
+    data = _data()
+    cfg = _cfg(rounds=8, server="async", server_refresh="staleness",
+               ingest_delay_rounds=1, snapshot_max_age=2,
+               drift_mass_trigger=0.2)
+    h_plain = run_federated(data, cfg)
+    trace_p = str(tmp_path / "trace.json")
+    with obs.observe(trace_path=trace_p) as ob:
+        h_obs = run_federated(data, cfg)
+    assert obs.current() is obs.DISABLED
+    assert _trace(h_plain) == _trace(h_obs)
+    names = ob.tracer.span_names()
+    assert {"drift_scan", "client_summaries", "local_train",
+            "select_devices"} <= names
+    # every event-engine dispatch got its own span
+    dispatches = [n for n in names if n.startswith("event/")]
+    assert {"event/scan", "event/select", "event/train"} <= set(dispatches)
+    trace = json.load(open(trace_p))
+    assert validate_chrome_trace(trace) == []
+    # ingest enqueue/drain instants + snapshot publish landed in the trace
+    inames = {e["name"] for e in trace["traceEvents"] if e["ph"] == "i"}
+    assert {"ingest/enqueue", "ingest/drain", "snapshot/publish"} <= inames
+    # queue counters live on the observer registry (merged with the
+    # ctx-owned one at finish(), so the JSONL export holds both)
+    m = ob.metrics.snapshot()
+    assert m["server/ingest/enqueued_batches"]["value"] > 0
+    assert m["server/ingest/drained_batches"]["value"] > 0
+    assert m["server/snapshots_published"]["value"] > 0
+    assert m["server/scan_s"]["count"] == cfg.rounds   # ctx merged in
+
+
+# ---------------------------------------------------------------------------
+# refresher staleness-bound edges via the new metrics (satellite)
+
+
+def test_staleness_bound_holds_in_metrics():
+    h = run_federated(_data(), _cfg(
+        rounds=10, server="async", server_refresh="staleness",
+        ingest_delay_rounds=1, snapshot_max_age=2, drift_mass_trigger=0.2))
+    m = h["metrics"]
+    # the gauge's running max is the bound check — no series needed
+    assert m["server/snapshot_age"]["max"] <= 2
+    assert m["server/snapshot_age"]["writes"] == 10
+    assert max(h["snapshot_age"]) == m["server/snapshot_age"]["max"]
+
+
+def test_blocking_counter_matches_server_accounting():
+    # mass trigger unreachable (1.0): every rebuild is an age-bound
+    # blocking one, so the counter must match the server's own count
+    # and be nonzero
+    h = run_federated(_data(), _cfg(
+        rounds=10, server="async", server_refresh="staleness",
+        ingest_delay_rounds=1, snapshot_max_age=1, drift_mass_trigger=1.0))
+    m = h["metrics"]
+    blocking = m["server/refresh/blocking"]["value"]
+    assert blocking == h["server"]["blocking_refreshes"] > 0
+    assert m["server/refresh/blocking_build_s"]["count"] == blocking
+    assert m["server/snapshot_age"]["max"] <= 1
+    # the counter fired because the age bound was actually reached
+    assert m["server/refresh/age_at_decision"]["max"] >= 1
+
+
+class _RefresherCtx:
+    """Minimal RoundContext slice the refresher consumes."""
+
+    uses_summaries = True
+
+    def __init__(self, registry):
+        self.registry = registry
+        self.metrics = MetricRegistry()
+        self.assignment = np.zeros(registry.num_clients, np.int64)
+        self.num_clusters = 1
+        self.reclusters = 0
+
+    def recluster_now(self, rnd, active, drifted):
+        self.reclusters += 1
+        return 0.0
+
+
+def test_blocking_counter_increments_exactly_at_the_bound():
+    import types
+
+    from repro.core import RefreshPolicy
+    from repro.server import (
+        ClusterRefresher, SnapshotStore, StalenessPolicy, capture,
+    )
+    from repro.stream import StreamingSummaryRegistry
+
+    n = 8
+    reg = StreamingSummaryRegistry(n, RefreshPolicy(4, 0.1))
+    reg.update_batch(np.arange(n), 0, np.ones((n, 3), np.float32),
+                     np.full((n, 4), 0.25, np.float32))
+    ctx = _RefresherCtx(reg)
+    store = SnapshotStore(capture(0, 0, reg, ctx.assignment, 1))
+    refresher = ClusterRefresher(
+        ctx, store, mode="staleness",
+        policy=StalenessPolicy(max_snapshot_age=2, drift_mass_trigger=0.5))
+    plan = types.SimpleNamespace(active=np.ones(n, bool),
+                                 joined=np.zeros(0, np.int64),
+                                 departed=np.zeros(0, np.int64))
+    blocking_c = ctx.metrics.counter("server/refresh/blocking")
+    background_c = ctx.metrics.counter("server/refresh/background")
+
+    # round 1: age 1 < bound, no drift mass -> no build, no counters
+    assert refresher.step(1, plan, []) == (0.0, None)
+    assert blocking_c.value == 0 and background_c.value == 0
+
+    # round 2: age hits the bound -> exactly one blocking build, counted
+    dt, snap = refresher.step(2, plan, [])
+    assert snap is None and refresher.blocking_builds == 1
+    assert blocking_c.value == 1 and background_c.value == 0
+    assert ctx.metrics.gauge("server/refresh/age_at_decision").max == 2
+    assert store.latest().round_idx == 2       # published: clock reset
+
+    # round 3: age back under the bound, drift mass >= trigger -> one
+    # background build (returned for next-round publish), blocking stays
+    refresher.note_ingested(range(4))          # 4/8 = the 0.5 trigger
+    dt, snap = refresher.step(3, plan, list(range(4)))
+    assert dt == 0.0 and snap is not None
+    assert blocking_c.value == 1 and background_c.value == 1
+    assert refresher.background_builds == 1
+    assert ctx.metrics.histogram(
+        "server/refresh/background_build_s").count == 1
