@@ -15,7 +15,11 @@ instead of letting a stray separator corrupt the record downstream.
 Free-form derived text (no ``=``) is allowed via ``text=`` for records
 nobody dict-parses.
 
-Schema history: **6** adds the ``obs/*`` overhead records and the
+Schema history: **7** adds the ``policies/*`` selection-policy
+tournament records (time-to-accuracy, kl-coverage, per-round selection
+overhead per preset x policy, leaderboard aggregates, and the
+``policies/quota_fix/*`` bugfix-demonstration cell); 6 adds the ``obs/*``
+overhead records and the
 ``server/percentiles/*`` critical-path latency-distribution records
 (p50/p99/p999 from ``repro.obs`` histograms); 5 added ``server_resume/*``
 durability records; 4 the async ``server/*`` records; 3 ``sharded/*``;
@@ -23,7 +27,7 @@ durability records; 4 the async ``server/*`` records; 3 ``sharded/*``;
 """
 from __future__ import annotations
 
-SCHEMA_VERSION = 6
+SCHEMA_VERSION = 7
 
 
 def fmt_value(v) -> str:

@@ -28,7 +28,7 @@ import statistics
 import sys
 
 DEFAULT_GROUPS = ("summary", "clustering", "sharded", "server",
-                  "server_resume", "obs")
+                  "server_resume", "obs", "policies")
 
 
 def group_records(report: dict,

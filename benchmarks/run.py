@@ -16,6 +16,9 @@ Prints ``name,us_per_call,derived`` CSV lines:
   * bench_dryrun      — §Roofline table from dry-run artifacts (if present)
   * bench_obs         — §10 telemetry: enabled-tracer overhead vs the 2%
                         budget + per-hook microcosts
+  * bench_policies    — §11 selection-policy tournament: time-to-accuracy
+                        + kl-coverage per policy x preset, and the
+                        quota-fix demonstration cell
 
 and mirrors every CSV record into a machine-readable ``BENCH.json``
 (``--json PATH`` to relocate, ``--no-json`` to disable) so the perf
@@ -41,6 +44,7 @@ from benchmarks import (
     bench_dryrun,
     bench_kernels,
     bench_obs,
+    bench_policies,
     bench_resume,
     bench_selection,
     bench_server,
@@ -60,6 +64,7 @@ BENCHES = (
     ("server", bench_server.main),
     ("resume", bench_resume.main),
     ("obs", bench_obs.main),
+    ("policies", bench_policies.main),
     ("compression", bench_compression.main),
     ("dryrun", bench_dryrun.main),
 )
@@ -129,9 +134,10 @@ def main(argv=None) -> None:
     print("name,us_per_call,derived")
     failures = []
     # schema history lives with the record format in benchmarks._record
-    # (6: obs/* overhead + server/percentiles/* latency-distribution
-    # records; 5: server_resume/* durability; 4: async server/*;
-    # 3: sharded/*; 2: scenario sweep)
+    # (7: policies/* tournament + quota-fix records; 6: obs/* overhead +
+    # server/percentiles/* latency-distribution records; 5:
+    # server_resume/* durability; 4: async server/*; 3: sharded/*;
+    # 2: scenario sweep)
     report: dict = {"schema": SCHEMA_VERSION, "full": bool(args.full),
                     "seed": int(args.seed),
                     "scenario_presets": list(PRESET_NAMES), "benches": {}}

@@ -230,6 +230,10 @@ def context_state(ctx) -> dict:
         "maintainer": maintainer_state(ctx.maintainer),
         "assignment": np.asarray(ctx.assignment, np.int64),
         "num_clusters": int(ctx.num_clusters),
+        # selection-policy training history (DESIGN.md §11): policies are
+        # stateless, so this is the only cross-round selection memory —
+        # restoring it replays history-aware selection bitwise
+        "client_stats": ctx.client_stats.state(),
         "history": {k: v for k, v in ctx.history.items()},
         "sim_time": float(ctx.sim_time),
         "dropped_rounds": int(ctx.dropped_rounds),
@@ -247,6 +251,7 @@ def restore_context(ctx, st: dict) -> None:
     restore_maintainer(ctx.maintainer, st["maintainer"])
     ctx.assignment = np.asarray(st["assignment"], np.int64)
     ctx.num_clusters = int(st["num_clusters"])
+    ctx.client_stats.load(st["client_stats"])
     _expect(set(st["history"]) == set(ctx.history),
             "history keys differ (checkpoint from another code version?)")
     ctx.history = {k: list(st["history"][k]) for k in ctx.history}

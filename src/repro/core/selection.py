@@ -9,8 +9,14 @@ round), each round selects:
   2. within each cluster, the fastest currently-available devices (system
      awareness — stragglers are avoided without losing any distribution).
 
-`random` and `fastest` strategies are the baselines the FL benchmark
-compares against.
+The actual strategies live in the pluggable policy registry
+(``repro.policies``, DESIGN.md §11); ``select_devices`` is the legacy
+one-call API kept for callers that predate the registry — it maps its
+``cfg.strategy`` string straight onto the registered policies, so the
+two entry points cannot drift apart.
+
+``cluster_quotas`` stays here: it is the HACCS coverage primitive the
+policies (and the tests) share.
 """
 from __future__ import annotations
 
@@ -22,57 +28,77 @@ import numpy as np
 @dataclasses.dataclass(frozen=True)
 class SelectionConfig:
     per_round: int = 10
-    strategy: str = "haccs"      # haccs | random | fastest
+    strategy: str = "haccs"      # any repro.policies registered name
 
 
 def cluster_quotas(assignment: np.ndarray, num_clusters: int,
-                   per_round: int) -> np.ndarray:
-    """Largest-remainder proportional quotas over non-empty clusters."""
-    counts = np.bincount(assignment[assignment >= 0], minlength=num_clusters)
-    total = counts.sum()
+                   per_round: int, ok: np.ndarray | None = None) -> np.ndarray:
+    """Largest-remainder proportional quotas over non-empty clusters.
+
+    ``ok`` (available ∧ active) restricts the population counts to the
+    clients selection can actually take: a cluster whose members are
+    mostly offline no longer wastes quota on its phantom population
+    (pre-PR-8 the counts ignored availability, so such clusters
+    under-filled and the backfill broke proportional coverage).
+
+    Quotas are capped at each cluster's (selectable) population; the
+    surplus that cap frees is *redistributed* with further
+    largest-remainder passes over clusters with spare capacity, instead
+    of being silently dropped (the PR-8 quota bug: ``min(base, counts)``
+    left ``sum(quotas) < per_round`` whenever a small cluster hit its
+    cap, and the fastest-anywhere backfill then ignored clusters
+    entirely).  The result always sums to ``min(per_round, pool size)``,
+    so the per-cluster fill can only come up short on genuine
+    availability starvation.
+    """
+    sel = assignment >= 0
+    if ok is not None:
+        sel = sel & np.asarray(ok, bool)
+    counts = np.bincount(assignment[sel], minlength=num_clusters)
+    total = int(counts.sum())
     if total == 0:
         return np.zeros(num_clusters, np.int64)
+    per_round = min(int(per_round), total)
     exact = per_round * counts / total
-    base = np.floor(exact).astype(np.int64)
-    short = per_round - base.sum()
-    order = np.argsort(-(exact - base))
-    base[order[:short]] += 1
-    return np.minimum(base, counts)
+    quotas = np.minimum(np.floor(exact).astype(np.int64), counts)
+    # largest-remainder passes: hand remaining slots to clusters with
+    # spare capacity by descending remainder (exact - quota), ties broken
+    # by cluster id (stable sort).  Later passes see negative remainders
+    # for clusters already over their exact share, so extra surplus flows
+    # to the least over-represented clusters first.  Terminates: every
+    # pass assigns >= 1 slot while any spare capacity remains, and
+    # per_round <= total guarantees spare capacity until quotas fill.
+    while True:
+        short = per_round - int(quotas.sum())
+        if short <= 0:
+            return quotas
+        spare = np.flatnonzero(counts - quotas > 0)
+        grant = spare[np.argsort(-(exact[spare] - quotas[spare]),
+                                 kind="stable")][:short]
+        quotas[grant] += 1
 
 
 def select_devices(assignment: np.ndarray, num_clusters: int,
                    speeds: np.ndarray, available: np.ndarray,
-                   cfg: SelectionConfig, rng: np.random.Generator,
+                   cfg: SelectionConfig, rng,
                    active: np.ndarray | None = None) -> np.ndarray:
     """Return selected device indices for one round.  ``active`` (scenario
     fleet membership) further restricts the candidate pool — a client that
-    left the fleet is never selected even if its availability bit is on."""
-    n = assignment.shape[0]
-    ok = available.astype(bool)
-    if active is not None:
-        ok = ok & np.asarray(active, bool)
-    if cfg.strategy == "random":
-        pool = np.flatnonzero(ok)
-        take = min(cfg.per_round, pool.size)
-        return rng.choice(pool, size=take, replace=False)
-    if cfg.strategy == "fastest":
-        pool = np.flatnonzero(ok)
-        order = pool[np.argsort(-speeds[pool])]
-        return order[:cfg.per_round]
-    if cfg.strategy != "haccs":
-        raise ValueError(cfg.strategy)
+    left the fleet is never selected even if its availability bit is on.
 
-    quotas = cluster_quotas(assignment, num_clusters, cfg.per_round)
-    chosen: list = []
-    for c in range(num_clusters):
-        members = np.flatnonzero((assignment == c) & ok)
-        if members.size == 0 or quotas[c] == 0:
-            continue
-        order = members[np.argsort(-speeds[members])]
-        chosen.extend(order[:quotas[c]].tolist())
-    # backfill if availability starved some clusters
-    if len(chosen) < cfg.per_round:
-        rest = np.setdiff1d(np.flatnonzero(ok), np.asarray(chosen, np.int64))
-        extra = rest[np.argsort(-speeds[rest])][:cfg.per_round - len(chosen)]
-        chosen.extend(extra.tolist())
-    return np.asarray(chosen[:cfg.per_round], np.int64)
+    Legacy API: builds a minimal ``PolicyContext`` (no label dists, no
+    training history) and dispatches to the registered policy named by
+    ``cfg.strategy`` — history-aware policies treat every client as
+    unseen under this entry point.  Unknown names raise ``ValueError``.
+    """
+    # lazy import: repro.policies imports cluster_quotas from this module
+    from repro.policies import PolicyContext, make_policy
+
+    policy = make_policy(cfg.strategy)
+    ctx = PolicyContext(round_idx=0, per_round=cfg.per_round,
+                        assignment=np.asarray(assignment),
+                        num_clusters=int(num_clusters),
+                        speeds=np.asarray(speeds),
+                        available=np.asarray(available), rng=rng,
+                        active=active)
+    return np.asarray(policy.select(ctx), np.int64)

@@ -8,6 +8,12 @@ from repro.utils.tree import tree_add, tree_weighted_sum
 
 def fedavg(global_params, deltas: list, num_samples: list):
     """params <- params + Σ (n_i / Σn) Δ_i  (McMahan et al.)."""
+    if len(deltas) != len(num_samples):
+        # a real error, not an assert: ``python -O`` strips the length
+        # assert inside tree_weighted_sum, which would silently zip-drop
+        # the unmatched tail instead of failing
+        raise ValueError(f"fedavg: {len(deltas)} deltas vs "
+                         f"{len(num_samples)} sample counts")
     total = float(sum(num_samples))
     if total <= 0 or not deltas:
         return global_params

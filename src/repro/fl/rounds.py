@@ -23,7 +23,8 @@ Per round (stage semantics shared by both servers via ``RoundContext``):
   4. (re-)cluster the summaries of active clients with K-means (or DBSCAN;
      ``online`` keeps assignments fresh with O(drifted) work per round and
      only refits when inertia degrades — DESIGN.md §5),
-  5. HACCS selection: per-cluster quotas, fastest available devices —
+  5. selection by the configured ``SelectionPolicy`` (DESIGN.md §11;
+     default HACCS: per-cluster quotas, fastest available devices) —
      restricted to the current fleet,
   6. deadline semantics: selected clients whose summary + compute + upload
      time exceeds the round deadline are dropped (straggler timeout), as are
@@ -52,9 +53,10 @@ import repro.obs as obs
 from repro.checkpoint.durable import Durability, DurableSession
 from repro.checkpoint.server_state import context_state, restore_context
 from repro.core import (
-    BatchedSummaryEngine, RefreshPolicy, SelectionConfig, SummaryRegistry,
-    dbscan, kmeans, minibatch_kmeans, select_devices, sym_kl,
+    BatchedSummaryEngine, RefreshPolicy, SummaryRegistry,
+    dbscan, kmeans, minibatch_kmeans, sym_kl,
 )
+from repro.policies import ClientStats, PolicyContext, make_policy
 from repro.shard import HierarchicalClusterMaintainer, ShardedSummaryRegistry
 from repro.stream import (
     OnlineClusterMaintainer, OnlinePolicy, StreamingSummaryRegistry,
@@ -64,6 +66,7 @@ from repro.fl.aggregation import fedavg
 from repro.fl.client import ClientRuntime, local_train, timed_summary
 from repro.fl.models import make_classifier, xent_loss
 from repro.fl.system import SystemModel, SystemSpec, completion_times
+from repro.utils.tree import global_norm
 from repro.models.cnn import CNNConfig, build_cnn, cnn_apply
 from repro.optim import sgd
 from repro.server.events import Stage
@@ -83,6 +86,10 @@ class FLConfig:
     hidden: int = 64
     # --- paper technique ---
     summary: str = "encoder"         # encoder | py | pxy | none
+    selection: str = "haccs"         # any repro.policies registered name:
+                                     # haccs | random | fastest |
+                                     # grad-importance | grey-relational |
+                                     # oort | ... (DESIGN.md §11)
     summary_engine: str = "batched"  # batched (one dispatch per bucket) |
                                      # perclient (legacy per-client jit loop)
     registry: str = "dict"           # dict (baseline SummaryRegistry) |
@@ -122,7 +129,6 @@ class FLConfig:
     coreset_k: int = 64
     encoder_dim: int = 32
     bins: int = 8
-    selection: str = "haccs"         # haccs | random | fastest
     recluster_every: int = 10
     refresh_max_age: int = 20
     refresh_kl: float = 0.1
@@ -271,7 +277,13 @@ class RoundContext:
             self.maintainer = HierarchicalClusterMaintainer(
                 cfg.num_clusters, n_shards=cfg.n_shards or None,
                 local_k=cfg.hier_local_k or None, policy=online_policy)
-        self.sel_cfg = SelectionConfig(cfg.clients_per_round, cfg.selection)
+        # pluggable selection policy (DESIGN.md §11): the config string
+        # maps through the registry; unknown names ValueError here, like
+        # every other backend string.  Policies are stateless — all
+        # cross-round memory lives in client_stats (checkpointed).
+        self.policy = make_policy(cfg.selection)
+        self.client_stats = ClientStats(spec.num_clients)
+        self._select_s = 0.0
 
         test_x, test_y = data.test_set()
         test_x, test_y = jnp.asarray(test_x), jnp.asarray(test_y)
@@ -289,8 +301,9 @@ class RoundContext:
         self.history: dict = {
             "round": [], "acc": [], "sim_time": [], "refreshes": [],
             "wall_summary_s": [], "selected": [], "completed": [],
-            "dropped": [], "kl_coverage": [], "n_active": [],
-            "n_joined": [], "n_departed": [],
+            "dropped": [], "kl_coverage": [], "kl_reachable": [],
+            "n_active": [],
+            "n_joined": [], "n_departed": [], "select_s": [],
             # server-overhead accounting (DESIGN.md §8): wall seconds of
             # the server-side stages and the share that sat on the
             # round-critical path; snapshot lineage for async runs
@@ -313,7 +326,7 @@ class RoundContext:
 
     @property
     def uses_summaries(self) -> bool:
-        return self.cfg.summary != "none" and self.cfg.selection == "haccs"
+        return self.cfg.summary != "none" and self.policy.needs_clusters
 
     def begin_round(self, rnd: int):
         """Advance the scenario, evict departures, refresh the cheap P(y)
@@ -493,11 +506,13 @@ class RoundContext:
     # ------------------------------------------------------------------
     # stage: selection
 
-    def select(self, rnd: int, plan: RoundPlan, assignment=None,
+    def select(self, rnd: int, plan: RoundPlan, fresh=None, assignment=None,
                num_clusters=None, has_mask=None) -> np.ndarray:
-        """HACCS selection restricted to the current fleet.  The sync
+        """Policy selection restricted to the current fleet.  The sync
         server reads the live registry/clustering (defaults); the async
-        server passes a published snapshot's view instead."""
+        server passes a published snapshot's view instead.  ``fresh`` is
+        this round's cheap per-client P(y) signal (from ``begin_round``)
+        — the data-heterogeneity input for distribution-aware policies."""
         cfg = self.cfg
         if assignment is None:
             assignment = self.assignment
@@ -513,14 +528,22 @@ class RoundContext:
             sel_assignment[~(np.asarray(has_mask, bool) & plan.active)] = -1
         else:
             sel_assignment = assignment
-        with obs.span("select_devices", round=rnd) as sp:
-            selected = select_devices(sel_assignment, num_clusters,
-                                      plan.speeds, plan.available,
-                                      self.sel_cfg, self.rng,
-                                      active=plan.active)
+        pctx = PolicyContext(
+            round_idx=rnd, per_round=cfg.clients_per_round,
+            assignment=sel_assignment, num_clusters=num_clusters,
+            speeds=plan.speeds, available=plan.available, rng=self.rng,
+            active=plan.active, label_dists=fresh,
+            data_sizes=self.data.sizes, stats=self.client_stats)
+        with obs.span("select_devices", round=rnd,
+                      policy=self.policy.name) as sp:
+            t0 = time.perf_counter()
+            selected = self.policy.select(pctx)
+            self._select_s = time.perf_counter() - t0
             sp.annotate(n_selected=int(np.asarray(selected).size))
+        selected = np.asarray(selected, np.int64)
         self.scenario.note_selected(selected)
-        return np.asarray(selected, np.int64)
+        self.client_stats.note_selected(selected, rnd)
+        return selected
 
     # ------------------------------------------------------------------
     # stage: training + accounting
@@ -566,21 +589,33 @@ class RoundContext:
                     continue
                 feats, labels, valid = self.data.client_data(int(c),
                                                              float(drift[c]))
-                delta, n, _ = local_train(self.runtime, self.params, feats,
-                                          labels, valid, cfg.local_steps,
-                                          self.rng)
+                delta, n, loss = local_train(self.runtime, self.params, feats,
+                                             labels, valid, cfg.local_steps,
+                                             self.rng)
                 deltas.append(delta)
                 sizes.append(n)
+                # per-client history the history-aware policies consume
+                # (Oort's loss utility, gradient-importance norms)
+                self.client_stats.note_result(int(c), loss,
+                                              float(global_norm(delta)))
         self.params = fedavg(self.params, deltas, sizes)
         if sel.size and not completed.any():
             self.dropped_rounds += 1
 
-        # selected-client KL coverage: how far the aggregated clients' label
-        # mixture sits from the active fleet's (lower = better coverage)
+        # selected-client KL coverage, against two reference mixtures
+        # (DESIGN.md §11): the *active fleet* (everyone enrolled — the
+        # statistical target, availability-blind) and the *reachable
+        # fleet* (active AND available this round — the best any selector
+        # could have covered).  The two disagree exactly where selection
+        # quality lives: a policy that allocates over phantom offline
+        # clients looks fine on the first and bad on the second.
         act_ids = np.flatnonzero(plan.active)
+        avail_ids = np.flatnonzero(plan.available)
         comp_ids = sel[completed] if sel.size else sel
         kl_cov = (sym_kl(fresh[comp_ids].mean(0), fresh[act_ids].mean(0))
                   if comp_ids.size and act_ids.size else float("nan"))
+        kl_reach = (sym_kl(fresh[comp_ids].mean(0), fresh[avail_ids].mean(0))
+                    if comp_ids.size and avail_ids.size else float("nan"))
 
         self.sim_time += t_round
         if rnd % cfg.eval_every == 0 or rnd == cfg.rounds - 1:
@@ -596,9 +631,11 @@ class RoundContext:
         h["completed"].append(sel[completed].tolist())
         h["dropped"].append(int(sel.size - completed.sum()))
         h["kl_coverage"].append(kl_cov)
+        h["kl_reachable"].append(kl_reach)
         h["n_active"].append(int(plan.active.sum()))
         h["n_joined"].append(int(plan.joined.size))
         h["n_departed"].append(int(plan.departed.size))
+        h["select_s"].append(self._select_s)
         h["server_scan_s"].append(self._meters["scan"])
         h["server_cluster_s"].append(self._meters["cluster"])
         h["server_drain_s"].append(self._meters["drain"])
@@ -677,7 +714,7 @@ def _drive_sync(ctx: RoundContext, session=None, faults=None,
                 ctx.recluster_now(rnd, plan.active,
                                   ctx.sync_drifted(plan, stale))
         step(rnd, Stage.REFRESH, refresh)
-        sel = step(rnd, Stage.SELECT, lambda: ctx.select(rnd, plan))
+        sel = step(rnd, Stage.SELECT, lambda: ctx.select(rnd, plan, fresh))
         step(rnd, Stage.TRAIN,
              lambda: ctx.train_and_log(rnd, plan, fresh, sel, times, wall,
                                        critical_s=ctx.round_overhead_s(),

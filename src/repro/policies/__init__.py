@@ -1,0 +1,32 @@
+"""Pluggable client-selection policies + registry (DESIGN.md §11).
+
+Importing this package registers the built-in policies:
+
+  haccs             clustered coverage + per-cluster fastest (paper §2)
+  haccs-legacy      pre-PR-8 quota bugs, kept for the bugfix benchmark
+  random            uniform baseline
+  fastest           pure system-utility baseline
+  grad-importance   norm-of-update ranking (arXiv 2111.11204)
+  grey-relational   multi-criteria GRA scoring (arXiv 2310.08147)
+  oort              statistical x system utility with exploration (OSDI'21)
+"""
+from repro.policies.base import (  # noqa: F401
+    ClientStats,
+    PolicyContext,
+    SelectionPolicy,
+    make_policy,
+    policy_names,
+    rank_desc,
+    register,
+)
+from repro.policies.fastest import FastestPolicy  # noqa: F401
+from repro.policies.grad_importance import GradImportancePolicy  # noqa: F401
+from repro.policies.grey_relational import GreyRelationalPolicy  # noqa: F401
+from repro.policies.haccs import HACCSPolicy, LegacyHACCSPolicy  # noqa: F401
+from repro.policies.oort import OortPolicy  # noqa: F401
+from repro.policies.random import RandomPolicy  # noqa: F401
+
+# the tournament roster: every real policy (the legacy-bug variant is
+# benchmark-only and deliberately excluded)
+TOURNAMENT_POLICIES = ("haccs", "random", "fastest", "grad-importance",
+                       "grey-relational", "oort")

@@ -1,0 +1,163 @@
+"""Pluggable client-selection policies (DESIGN.md §11).
+
+The paper's thesis is that cheap distribution summaries make *smart
+selection* affordable at fleet scale; this package makes the repo a
+testbed for *what* to select.  A ``SelectionPolicy`` consumes one
+``PolicyContext`` — the frozen per-round view of everything a selector
+may legitimately read (cluster assignment, device speeds/availability,
+fresh label distributions, per-client training history) — and returns
+the selected device indices.
+
+Contract (enforced by ``tests/test_policies.py``):
+
+  * **stateless** — all cross-round memory lives in ``ClientStats``,
+    which the round loop owns and checkpoints; a policy object can be
+    rebuilt from its name at any round and produce the same decision,
+    which is what makes kill-and-resume (DESIGN.md §9) and the async
+    snapshot-read select stage (§8) policy-agnostic;
+  * **deterministic** — equal scores break ties by client id (use
+    ``rank_desc``: every ranking that feeds selection sorts with
+    ``kind="stable"``); randomized policies draw only from ``ctx.rng``;
+  * selected ids are unique, within ``ctx.per_round``, and a subset of
+    ``ctx.selectable()`` (available ∧ active).
+
+Policies register under a name via ``@register``; the round loop maps
+``FLConfig.selection`` strings through ``make_policy`` (unknown names
+raise ``ValueError``, same as every other backend string).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+def rank_desc(values) -> np.ndarray:
+    """Indices sorting ``values`` descending with ties broken by index
+    (ascending).  ``np.argsort`` defaults to quicksort, whose tie order
+    is an implementation detail — every ranking that feeds selection
+    goes through this stable sort so traces are reproducible by
+    construction."""
+    return np.argsort(-np.asarray(values), kind="stable")
+
+
+class ClientStats:
+    """Per-client training-history arrays the history-aware policies
+    read (Oort's statistical utility, gradient-importance ranking).
+
+    Owned and mutated by the round loop only: ``note_selected`` when a
+    client is picked, ``note_result`` when its local training completed.
+    Serialized wholesale into checkpoints (``state``/``load``) so a
+    resumed run replays history-aware selection bitwise."""
+
+    def __init__(self, num_clients: int):
+        self.num_clients = int(num_clients)
+        self.part_count = np.zeros(num_clients, np.int64)
+        self.last_selected = np.full(num_clients, -1, np.int64)
+        self.last_loss = np.full(num_clients, np.nan)
+        self.update_norm = np.full(num_clients, np.nan)
+
+    def note_selected(self, ids, rnd: int) -> None:
+        ids = np.asarray(ids, np.int64)
+        self.part_count[ids] += 1
+        self.last_selected[ids] = int(rnd)
+
+    def note_result(self, client: int, loss: float, norm: float) -> None:
+        self.last_loss[client] = float(loss)
+        self.update_norm[client] = float(norm)
+
+    @property
+    def seen(self) -> np.ndarray:
+        """Clients that have participated at least once."""
+        return self.part_count > 0
+
+    def state(self) -> dict:
+        return {"part_count": self.part_count.copy(),
+                "last_selected": self.last_selected.copy(),
+                "last_loss": self.last_loss.copy(),
+                "update_norm": self.update_norm.copy()}
+
+    def load(self, st: dict) -> None:
+        self.part_count = np.asarray(st["part_count"], np.int64)
+        self.last_selected = np.asarray(st["last_selected"], np.int64)
+        self.last_loss = np.asarray(st["last_loss"], np.float64)
+        self.update_norm = np.asarray(st["update_norm"], np.float64)
+
+
+@dataclasses.dataclass
+class PolicyContext:
+    """Everything one selection decision may read, for one round.
+
+    ``assignment`` uses the registry convention: cluster id per client,
+    ``-1`` for clients outside the quota pool (no live summary row, or
+    outside the current fleet).  ``label_dists`` is the cheap per-client
+    P(y) drift signal the round loop already computes every round — the
+    paper's cheapest distribution summary — so data-aware policies pay
+    no extra summary cost.  ``stats`` is the shared training history;
+    ``None`` for both means the caller is a summary-free baseline path
+    (policies must degrade gracefully, e.g. treat every client as
+    unseen)."""
+    round_idx: int
+    per_round: int
+    assignment: np.ndarray
+    num_clusters: int
+    speeds: np.ndarray
+    available: np.ndarray
+    rng: np.random.Generator | np.random.RandomState
+    active: np.ndarray | None = None
+    label_dists: np.ndarray | None = None
+    data_sizes: np.ndarray | None = None
+    stats: ClientStats | None = None
+
+    def selectable(self) -> np.ndarray:
+        """Bool mask of the genuine candidate pool: available ∧ active."""
+        ok = np.asarray(self.available, bool)
+        if self.active is not None:
+            ok = ok & np.asarray(self.active, bool)
+        return ok
+
+    def pool(self) -> np.ndarray:
+        """Candidate client ids, ascending."""
+        return np.flatnonzero(self.selectable())
+
+
+class SelectionPolicy:
+    """Base class: one ``select`` per round.  ``needs_clusters`` tells
+    the round loop whether to run the summary/clustering pipeline at all
+    (baselines skip it — their selection overhead is honest)."""
+
+    name: str = "?"
+    needs_clusters: bool = False
+
+    def select(self, ctx: PolicyContext) -> np.ndarray:
+        raise NotImplementedError
+
+
+_REGISTRY: dict[str, type[SelectionPolicy]] = {}
+
+
+def register(name: str, *, aliases: tuple[str, ...] = ()):
+    """Class decorator: register a policy under ``name`` (+ aliases)."""
+    def deco(cls):
+        cls.name = name
+        for n in (name, *aliases):
+            if n in _REGISTRY:
+                raise ValueError(f"selection policy {n!r} already registered")
+            _REGISTRY[n] = cls
+        return cls
+    return deco
+
+
+def make_policy(name: str, **kwargs) -> SelectionPolicy:
+    """Instantiate a registered policy by name.  Unknown names fail
+    loudly, exactly like every other backend string in ``FLConfig``."""
+    cls = _REGISTRY.get(name)
+    if cls is None:
+        raise ValueError(f"unknown selection policy {name!r}; "
+                         f"known: {sorted(_REGISTRY)}")
+    return cls(**kwargs)
+
+
+def policy_names() -> tuple[str, ...]:
+    """Primary (non-alias) registered policy names, sorted."""
+    return tuple(sorted({cls.name for cls in _REGISTRY.values()}))

@@ -1,0 +1,18 @@
+"""Fastest-only selection — the pure system-utility baseline: minimal
+round time, no statistical coverage at all (the straggler-free but
+coverage-blind extreme HACCS interpolates away from)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.policies.base import (
+    PolicyContext, SelectionPolicy, rank_desc, register,
+)
+
+
+@register("fastest")
+class FastestPolicy(SelectionPolicy):
+    def select(self, ctx: PolicyContext) -> np.ndarray:
+        pool = ctx.pool()
+        order = pool[rank_desc(ctx.speeds[pool])]
+        return np.asarray(order[:ctx.per_round], np.int64)

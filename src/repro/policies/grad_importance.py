@@ -1,0 +1,43 @@
+"""Gradient-importance ranking (Marnissi et al., arXiv 2111.11204).
+
+Clients whose last local update moved the global model the most carry
+the most information — rank by the norm of the last aggregated delta
+(recorded per client in ``ClientStats.update_norm`` by the round loop)
+and take the top-k.  Never-seen clients rank first: their importance is
+unknown, so the policy explores them before exploiting known norms
+(Marnissi et al. seed their importance estimates the same way — every
+client must report at least one gradient before ranking is meaningful).
+
+Scores are scaled by ``sqrt(data size)`` when sizes are known: a large
+client's update norm is computed over more local steps' worth of data,
+so equal norms from unequal datasets are not equal evidence.
+
+Deterministic by construction: unseen clients tie at +inf and fall back
+to ascending client id via the stable sort; seen clients tie the same
+way.  No RNG is consumed.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.policies.base import (
+    PolicyContext, SelectionPolicy, rank_desc, register,
+)
+
+
+@register("grad-importance", aliases=("grad_importance",))
+class GradImportancePolicy(SelectionPolicy):
+    def select(self, ctx: PolicyContext) -> np.ndarray:
+        pool = ctx.pool()
+        if pool.size == 0:
+            return np.zeros(0, np.int64)
+        if ctx.stats is None:
+            score = np.full(pool.size, np.inf)        # all unseen: explore
+        else:
+            norm = np.nan_to_num(ctx.stats.update_norm[pool], nan=0.0)
+            if ctx.data_sizes is not None:
+                norm = norm * np.sqrt(
+                    np.maximum(np.asarray(ctx.data_sizes)[pool], 1.0))
+            score = np.where(ctx.stats.seen[pool], norm, np.inf)
+        order = pool[rank_desc(score)]
+        return np.asarray(order[:ctx.per_round], np.int64)

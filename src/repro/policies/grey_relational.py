@@ -1,0 +1,81 @@
+"""Grey-relational multi-criteria selection (Chen et al., arXiv
+2310.08147).
+
+Grey Relational Analysis scores each candidate against an ideal
+reference client across criteria spanning *system* heterogeneity (device
+speed) and *data* heterogeneity (dataset size; how representative the
+client's label distribution is of the live fleet's mixture), plus a
+fairness term (rounds since last participation) so the same
+high-scoring clients don't monopolize rounds.
+
+Per round, over the candidate pool:
+
+  1. each criterion column is min-max normalized to [0, 1] as a benefit
+     (higher = better); the ideal reference is 1 everywhere,
+  2. grey relational coefficient  ξ_ij = (Δmin + ρ·Δmax) /
+     (Δ_ij + ρ·Δmax)  with Δ_ij = |1 − x_ij| and the conventional
+     distinguishing coefficient ρ = 0.5,
+  3. the grey relational grade is the weighted mean of ξ over criteria;
+     the top-k grades are selected (stable sort — ties by client id).
+
+The representativeness criterion reads ``ctx.label_dists`` — the cheap
+per-round P(y) signal the registry's drift scan already computes — so
+the policy prices *no extra* summary work, exactly the paper's point.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.scheduler import batch_sym_kl
+from repro.policies.base import (
+    PolicyContext, SelectionPolicy, rank_desc, register,
+)
+
+
+def _benefit(col: np.ndarray) -> np.ndarray:
+    """Min-max normalize a criterion to [0, 1]; constant columns map to
+    1.0 (every candidate is ideal on a criterion nobody differs on)."""
+    lo, hi = float(col.min()), float(col.max())
+    if hi - lo <= 0:
+        return np.ones_like(col)
+    return (col - lo) / (hi - lo)
+
+
+@register("grey-relational", aliases=("grey_relational",))
+class GreyRelationalPolicy(SelectionPolicy):
+    def __init__(self, rho: float = 0.5, weights=None):
+        self.rho = float(rho)
+        self.weights = weights            # per-criterion; None = uniform
+
+    def criteria(self, ctx: PolicyContext, pool: np.ndarray) -> np.ndarray:
+        """[pool, m] benefit matrix, each column already in [0, 1]."""
+        cols = [_benefit(np.asarray(ctx.speeds, np.float64)[pool])]
+        if ctx.data_sizes is not None:
+            cols.append(_benefit(
+                np.log1p(np.asarray(ctx.data_sizes, np.float64)[pool])))
+        if ctx.label_dists is not None:
+            dists = np.asarray(ctx.label_dists, np.float64)[pool]
+            fleet = dists.mean(0, keepdims=True)
+            div = np.asarray(batch_sym_kl(dists, np.broadcast_to(
+                fleet, dists.shape)), np.float64)
+            cols.append(_benefit(-div))   # closer to the fleet = benefit
+        if ctx.stats is not None:
+            since = np.where(ctx.stats.seen[pool],
+                             ctx.round_idx - ctx.stats.last_selected[pool],
+                             ctx.round_idx + 1).astype(np.float64)
+            cols.append(_benefit(since))  # rested clients = benefit
+        return np.stack(cols, axis=1)
+
+    def select(self, ctx: PolicyContext) -> np.ndarray:
+        pool = ctx.pool()
+        if pool.size == 0:
+            return np.zeros(0, np.int64)
+        X = self.criteria(ctx, pool)
+        delta = np.abs(1.0 - X)           # distance to the ideal reference
+        dmin, dmax = float(delta.min()), float(delta.max())
+        xi = (dmin + self.rho * dmax) / (delta + self.rho * dmax)
+        w = (np.full(X.shape[1], 1.0 / X.shape[1])
+             if self.weights is None else np.asarray(self.weights, np.float64))
+        grade = xi @ w
+        order = pool[rank_desc(grade)]
+        return np.asarray(order[:ctx.per_round], np.int64)

@@ -1,0 +1,73 @@
+"""HACCS clustered selection (paper §2, Fig. 1) as a registered policy.
+
+Per-cluster quotas proportional to each cluster's *selectable*
+population (largest-remainder with capped-surplus redistribution —
+``core.selection.cluster_quotas``), then the fastest available devices
+within each cluster.  The backfill only fires on genuine availability
+starvation: with availability-aware quotas every cluster can fill its
+quota by construction, so the only clients left uncovered are
+unclustered ones (no live summary row).
+
+``haccs-legacy`` preserves the pre-PR-8 quota computation (population
+counted over *all* assigned clients, capped surplus silently dropped,
+fastest-anywhere backfill) solely so the tournament can demonstrate the
+bugfix's kl-coverage win — it is excluded from the leaderboard.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.selection import cluster_quotas
+from repro.policies.base import (
+    PolicyContext, SelectionPolicy, rank_desc, register,
+)
+
+
+@register("haccs")
+class HACCSPolicy(SelectionPolicy):
+    needs_clusters = True
+
+    def quotas(self, ctx: PolicyContext, ok: np.ndarray) -> np.ndarray:
+        return cluster_quotas(ctx.assignment, ctx.num_clusters,
+                              ctx.per_round, ok=ok)
+
+    def select(self, ctx: PolicyContext) -> np.ndarray:
+        ok = ctx.selectable()
+        quotas = self.quotas(ctx, ok)
+        chosen: list = []
+        for c in range(ctx.num_clusters):
+            members = np.flatnonzero((ctx.assignment == c) & ok)
+            if members.size == 0 or quotas[c] == 0:
+                continue
+            order = members[rank_desc(ctx.speeds[members])]
+            chosen.extend(order[:quotas[c]].tolist())
+        # backfill: only genuine starvation lands here (quotas already
+        # reflect availability) — unclustered clients are the remainder
+        if len(chosen) < ctx.per_round:
+            rest = np.setdiff1d(np.flatnonzero(ok),
+                                np.asarray(chosen, np.int64))
+            extra = rest[rank_desc(ctx.speeds[rest])]
+            chosen.extend(extra[:ctx.per_round - len(chosen)].tolist())
+        return np.asarray(chosen[:ctx.per_round], np.int64)
+
+
+@register("haccs-legacy")
+class LegacyHACCSPolicy(HACCSPolicy):
+    """The pre-fix quota path, verbatim: counts ignore availability and
+    the ``min(base, counts)`` cap drops its surplus, so small-cluster
+    caps and offline-heavy clusters under-fill the per-cluster pass and
+    the backfill picks globally-fastest clients regardless of cluster.
+    Kept only for the ``policies/quota_fix`` benchmark record."""
+
+    def quotas(self, ctx: PolicyContext, ok: np.ndarray) -> np.ndarray:
+        a = ctx.assignment
+        counts = np.bincount(a[a >= 0], minlength=ctx.num_clusters)
+        total = counts.sum()
+        if total == 0:
+            return np.zeros(ctx.num_clusters, np.int64)
+        exact = ctx.per_round * counts / total
+        base = np.floor(exact).astype(np.int64)
+        short = ctx.per_round - base.sum()
+        order = np.argsort(-(exact - base), kind="stable")
+        base[order[:short]] += 1
+        return np.minimum(base, counts)

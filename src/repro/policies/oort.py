@@ -1,0 +1,86 @@
+"""Oort-style statistical + system utility selection (Lai et al.,
+OSDI'21 — the exploitation/exploration selector the Fu et al. and
+Soltani et al. surveys in PAPERS.md benchmark everything against).
+
+Each seen client gets a utility
+
+    U_i = ( sqrt(|B_i|) · loss_i  +  sqrt(α · log r / a_i) )
+          · min(1, (T / t_i))^β  /  (1 + γ · p_i)
+
+  * **statistical** — ``sqrt(|B_i|) · loss_i``: Oort's importance proxy
+    (dataset size × root-mean training loss; ``ClientStats.last_loss``
+    holds the client's last local loss);
+  * **temporal uncertainty** — ``sqrt(α log r / a_i)`` with ``a_i`` the
+    rounds since last participation: a confidence bonus that decays the
+    longer a utility estimate goes unrefreshed (UCB-shaped);
+  * **system** — ``min(1, T/t_i)^β`` with ``t_i = 1/speed_i`` and ``T``
+    the pool's median completion time: clients slower than the
+    developer-preferred duration are penalized polynomially, fast
+    clients are not rewarded beyond it;
+  * **participation penalty** — ``1/(1 + γ·p_i)``: clients picked many
+    times yield diminishing statistical novelty (and fairness suffers).
+
+Exploration: an ε fraction of the budget (decaying per round to a
+floor) is filled by uniform draws from the never-seen candidates via
+``ctx.rng``; the rest exploits top utilities (stable sort, ties by id).
+Either side tops up from the other when its pool runs short.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.policies.base import (
+    PolicyContext, SelectionPolicy, rank_desc, register,
+)
+
+
+@register("oort")
+class OortPolicy(SelectionPolicy):
+    def __init__(self, explore_init: float = 0.9, explore_decay: float = 0.95,
+                 explore_min: float = 0.2, alpha: float = 0.1,
+                 beta: float = 2.0, penalty: float = 0.1):
+        self.explore_init = float(explore_init)
+        self.explore_decay = float(explore_decay)
+        self.explore_min = float(explore_min)
+        self.alpha = float(alpha)
+        self.beta = float(beta)
+        self.penalty = float(penalty)
+
+    def utility(self, ctx: PolicyContext, ids: np.ndarray) -> np.ndarray:
+        stats = ctx.stats
+        loss = np.nan_to_num(stats.last_loss[ids], nan=0.0)
+        sizes = (np.maximum(np.asarray(ctx.data_sizes, np.float64)[ids], 1.0)
+                 if ctx.data_sizes is not None else np.ones(ids.size))
+        stat = np.sqrt(sizes) * loss
+        age = np.maximum(ctx.round_idx - stats.last_selected[ids], 1)
+        stat = stat + np.sqrt(
+            self.alpha * np.log(ctx.round_idx + 2.0) / age)
+        t = 1.0 / np.maximum(np.asarray(ctx.speeds, np.float64)[ids], 1e-9)
+        pref = float(np.median(t))
+        sysu = np.minimum(1.0, pref / t) ** self.beta
+        return stat * sysu / (1.0 + self.penalty * stats.part_count[ids])
+
+    def select(self, ctx: PolicyContext) -> np.ndarray:
+        pool = ctx.pool()
+        k = min(ctx.per_round, pool.size)
+        if k == 0:
+            return np.zeros(0, np.int64)
+        if ctx.stats is None:             # no history at all: pure explore
+            return np.asarray(ctx.rng.choice(pool, size=k, replace=False),
+                              np.int64)
+        seen = ctx.stats.seen[pool]
+        unseen, known = pool[~seen], pool[seen]
+        eps = max(self.explore_min,
+                  self.explore_init * self.explore_decay ** ctx.round_idx)
+        n_explore = min(int(round(eps * k)), unseen.size)
+        n_exploit = min(k - n_explore, known.size)
+        n_explore = min(k - n_exploit, unseen.size)   # top up if known short
+        chosen: list = []
+        if n_explore:
+            chosen.extend(np.asarray(
+                ctx.rng.choice(unseen, size=n_explore,
+                               replace=False), np.int64).tolist())
+        if n_exploit:
+            order = known[rank_desc(self.utility(ctx, known))]
+            chosen.extend(order[:n_exploit].tolist())
+        return np.asarray(chosen, np.int64)

@@ -1,0 +1,16 @@
+"""Uniform-random selection — the FedAvg baseline every tournament
+compares against (and the floor any smart policy must beat)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.policies.base import PolicyContext, SelectionPolicy, register
+
+
+@register("random")
+class RandomPolicy(SelectionPolicy):
+    def select(self, ctx: PolicyContext) -> np.ndarray:
+        pool = ctx.pool()
+        take = min(ctx.per_round, pool.size)
+        return np.asarray(ctx.rng.choice(pool, size=take, replace=False),
+                          np.int64)

@@ -160,7 +160,8 @@ def drive_async(ctx, session=None, faults=None, start_round: int = 0,
         st = state[rnd]
         snap = store.latest()
         st["snap"] = snap
-        st["sel"] = ctx.select(rnd, st["plan"], assignment=snap.assignment,
+        st["sel"] = ctx.select(rnd, st["plan"], st["fresh"],
+                               assignment=snap.assignment,
                                num_clusters=snap.num_clusters,
                                has_mask=snap.has_mask)
 

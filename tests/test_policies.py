@@ -1,0 +1,281 @@
+"""Selection-policy framework (DESIGN.md §11): quota-redistribution unit
+pins (the PR-8 bugfixes), stable-tie determinism, per-policy smoke across
+scenario presets x sync/async servers, and a 24-seed differential cell
+pinning the registry-dispatched ``haccs`` policy against an independent
+reference implementation of the fixed HACCS semantics (the legacy
+``strategy="haccs"`` entry point maps onto the same registry, so the two
+entry points are pinned to each other as well)."""
+import numpy as np
+import pytest
+
+from repro.core import SelectionConfig, cluster_quotas, select_devices
+from repro.data.synthetic import FederatedDataset, small_spec
+from repro.fl import FLConfig, fedavg, run_federated
+from repro.policies import (
+    TOURNAMENT_POLICIES, ClientStats, PolicyContext, make_policy,
+    policy_names, rank_desc,
+)
+from repro.sim import make_scenario
+
+SEEDS = range(24)
+
+
+# ---------------------------------------------------------------------------
+# quota redistribution (satellite bugfixes 1 + 2)
+
+
+def test_quota_capped_surplus_redistributed():
+    """per_round beyond a small cluster's population: the capped surplus
+    flows to clusters with spare capacity instead of being dropped."""
+    assignment = np.array([0] + [1] * 9)
+    q = cluster_quotas(assignment, 2, 6)
+    np.testing.assert_array_equal(q, [1, 5])
+    assert q.sum() == 6                      # nothing silently dropped
+
+
+def test_quota_clamped_to_selectable_pool():
+    """per_round larger than the whole candidate pool: quotas sum to the
+    pool (backfill has nothing cluster-shaped left to add)."""
+    assignment = np.array([0, 0, 1, 1, 1])
+    q = cluster_quotas(assignment, 2, 50)
+    np.testing.assert_array_equal(q, [2, 3])
+
+
+def test_quota_starved_cluster_counts_selectable_members_only():
+    """A cluster whose members are mostly offline no longer wastes quota
+    on its phantom population (pre-fix: counts ignored availability, the
+    offline-heavy cluster under-filled, and the fastest-anywhere backfill
+    broke proportional coverage)."""
+    assignment = np.array([0] * 10 + [1] * 10)
+    ok = np.ones(20, bool)
+    ok[1:10] = False                         # cluster 0: 1 of 10 available
+    q = cluster_quotas(assignment, 2, 10, ok=ok)
+    np.testing.assert_array_equal(q, [1, 9])
+    assert q.sum() == 10
+
+
+def test_quota_all_offline_cluster_gets_zero():
+    assignment = np.array([0] * 10 + [1] * 10)
+    ok = np.ones(20, bool)
+    ok[:10] = False                          # cluster 0 fully offline
+    q = cluster_quotas(assignment, 2, 6, ok=ok)
+    np.testing.assert_array_equal(q, [0, 6])
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_quota_invariants_random(seed):
+    """Sum and cap invariants over random fleets: quotas always sum to
+    ``min(per_round, selectable pool)`` and never exceed per-cluster
+    selectable populations."""
+    rs = np.random.RandomState(seed)
+    n, k = 40, 5
+    assignment = rs.randint(-1, k, n)
+    ok = rs.rand(n) > 0.4
+    per_round = int(rs.randint(1, 25))
+    q = cluster_quotas(assignment, k, per_round, ok=ok)
+    counts = np.bincount(assignment[(assignment >= 0) & ok], minlength=k)
+    assert q.sum() == min(per_round, counts.sum())
+    assert (q <= counts).all()
+    assert (q >= 0).all()
+
+
+def test_haccs_backfill_only_on_genuine_starvation():
+    """With availability-aware quotas every cluster fills its quota, so
+    the only backfill source left is unclustered clients."""
+    n = 12
+    assignment = np.array([0] * 4 + [1] * 4 + [-1] * 4)
+    speeds = np.linspace(1.0, 2.0, n)
+    ok = np.ones(n, bool)
+    policy = make_policy("haccs")
+    ctx = PolicyContext(round_idx=0, per_round=10, assignment=assignment,
+                        num_clusters=2, speeds=speeds, available=ok,
+                        rng=np.random.default_rng(0))
+    sel = policy.select(ctx)
+    assert len(sel) == 10
+    # all 8 clustered clients selected (quotas 4+4), 2 unclustered backfills
+    assert set(range(8)) <= set(sel.tolist())
+    assert np.sum(assignment[sel] == -1) == 2
+
+
+# ---------------------------------------------------------------------------
+# stable-tie determinism (satellite bugfix 3)
+
+
+def test_equal_speed_ties_break_by_client_id():
+    """All speeds equal: every ranking-based policy must pick the lowest
+    client ids, by construction of the stable sort — quicksort tie order
+    is an implementation detail traces must not depend on."""
+    n = 16
+    speeds = np.ones(n)
+    ok = np.ones(n, bool)
+    for name in ("fastest", "haccs"):
+        ctx = PolicyContext(round_idx=0, per_round=5,
+                            assignment=np.zeros(n, np.int64), num_clusters=1,
+                            speeds=speeds, available=ok,
+                            rng=np.random.default_rng(0))
+        sel = make_policy(name).select(ctx)
+        np.testing.assert_array_equal(np.sort(sel), np.arange(5)), name
+
+
+def test_rank_desc_is_stable():
+    v = np.array([2.0, 1.0, 2.0, 3.0, 1.0])
+    np.testing.assert_array_equal(rank_desc(v), [3, 0, 2, 1, 4])
+
+
+def test_policies_deterministic_across_calls():
+    """Same context twice ⇒ same selection, for every deterministic
+    policy (random/oort consume ctx.rng: pin via equal rng states)."""
+    rs = np.random.RandomState(7)
+    n = 30
+    stats = ClientStats(n)
+    stats.note_selected(np.arange(0, n, 2), 0)
+    for c in range(0, n, 2):
+        stats.note_result(c, float(rs.rand()), float(rs.rand()))
+    kw = dict(round_idx=3, per_round=8,
+              assignment=rs.randint(-1, 4, n), num_clusters=4,
+              speeds=rs.rand(n), available=rs.rand(n) > 0.2,
+              label_dists=rs.dirichlet([0.5] * 5, n),
+              data_sizes=rs.randint(8, 64, n), stats=stats)
+    for name in policy_names():
+        a = make_policy(name).select(
+            PolicyContext(rng=np.random.default_rng(11), **kw))
+        b = make_policy(name).select(
+            PolicyContext(rng=np.random.default_rng(11), **kw))
+        np.testing.assert_array_equal(a, b), name
+        assert len(set(a.tolist())) == len(a) <= 8, name
+        ok = np.flatnonzero(kw["available"])
+        assert set(a.tolist()) <= set(ok.tolist()), name
+
+
+# ---------------------------------------------------------------------------
+# 24-seed differential: registry-dispatched haccs ≡ reference semantics,
+# and the legacy select_devices entry point ≡ the policy entry point
+
+
+def _reference_haccs(assignment, num_clusters, speeds, ok, per_round):
+    """Independent re-statement of the fixed HACCS semantics (quota over
+    selectable members, largest-remainder with cap redistribution,
+    stable per-cluster fastest, starvation-only backfill)."""
+    counts = np.bincount(assignment[(assignment >= 0) & ok],
+                         minlength=num_clusters)
+    total = counts.sum()
+    quotas = np.zeros(num_clusters, np.int64)
+    if total:
+        k = min(per_round, int(total))
+        exact = k * counts / total
+        quotas = np.minimum(np.floor(exact).astype(np.int64), counts)
+        while quotas.sum() < k:
+            spare = np.flatnonzero(counts > quotas)
+            best = spare[np.argsort(-(exact[spare] - quotas[spare]),
+                                    kind="stable")]
+            quotas[best[:k - quotas.sum()]] += 1
+    chosen = []
+    for c in range(num_clusters):
+        members = np.flatnonzero((assignment == c) & ok)
+        order = members[np.argsort(-speeds[members], kind="stable")]
+        chosen.extend(order[:quotas[c]].tolist())
+    rest = np.setdiff1d(np.flatnonzero(ok), np.asarray(chosen, np.int64))
+    extra = rest[np.argsort(-speeds[rest], kind="stable")]
+    chosen.extend(extra[:per_round - len(chosen)].tolist())
+    return np.asarray(chosen[:per_round], np.int64)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_haccs_policy_matches_reference_and_legacy_entry(seed):
+    rs = np.random.RandomState(seed)
+    n, k = 50, 6
+    assignment = rs.randint(-1, k, n)
+    # quantized speeds: real ties, so this differential would catch an
+    # unstable sort sneaking back in
+    speeds = np.round(rs.lognormal(0, 0.7, n), 1)
+    available = rs.rand(n) > 0.3
+    active = rs.rand(n) > 0.1
+    per_round = int(rs.randint(1, 20))
+    ok = available & active
+    want = _reference_haccs(assignment, k, speeds, ok, per_round)
+
+    ctx = PolicyContext(round_idx=int(seed), per_round=per_round,
+                        assignment=assignment, num_clusters=k, speeds=speeds,
+                        available=available, active=active,
+                        rng=np.random.default_rng(seed))
+    np.testing.assert_array_equal(make_policy("haccs").select(ctx), want)
+    # the legacy strategy="haccs" entry point maps onto the same registry
+    got = select_devices(assignment, k, speeds, available,
+                         SelectionConfig(per_round, "haccs"),
+                         np.random.default_rng(seed), active=active)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_unknown_policy_name_raises():
+    with pytest.raises(ValueError, match="unknown selection policy"):
+        make_policy("mystery")
+    with pytest.raises(ValueError, match="unknown selection policy"):
+        select_devices(np.zeros(4, np.int64), 1, np.ones(4),
+                       np.ones(4, bool), SelectionConfig(2, "mystery"),
+                       np.random.default_rng(0))
+
+
+def test_unknown_policy_rejected_by_round_loop():
+    data = FederatedDataset(small_spec(num_clients=6, num_classes=3, side=8,
+                                       avg_samples=12), seed=0)
+    with pytest.raises(ValueError, match="unknown selection policy"):
+        run_federated(data, FLConfig(rounds=1, selection="mystery"))
+
+
+# ---------------------------------------------------------------------------
+# fedavg hard error (satellite bugfix 3b): python -O strips asserts
+
+
+def test_fedavg_length_mismatch_raises():
+    import jax.numpy as jnp
+    base = {"w": jnp.ones((2, 2))}
+    with pytest.raises(ValueError, match="fedavg"):
+        fedavg(base, [base], [1, 2])
+
+
+# ---------------------------------------------------------------------------
+# per-policy e2e smoke: presets x sync/async through the real round loop
+
+
+@pytest.fixture(scope="module")
+def smoke_data():
+    return FederatedDataset(small_spec(num_clients=20, num_classes=5, side=8,
+                                       avg_samples=24), seed=1)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("policy", TOURNAMENT_POLICIES)
+@pytest.mark.parametrize("preset,server", [
+    ("mobile-churn", "sync"), ("mobile-churn", "async"),
+    ("straggler", "sync"), ("pathological-noniid", "async"),
+])
+def test_policy_e2e_smoke(smoke_data, policy, preset, server):
+    scenario = make_scenario(preset, 20, seed=3)
+    cfg = FLConfig(rounds=3, clients_per_round=4, local_steps=2,
+                   summary="py", selection=policy, num_clusters=3,
+                   eval_every=2, seed=4, server=server)
+    h = run_federated(smoke_data, cfg, scenario=scenario)
+    assert len(h["selected"]) == 3
+    for rnd, sel in enumerate(h["selected"]):
+        assert len(set(sel)) == len(sel) <= 4
+    assert len(h["select_s"]) == 3 and all(s >= 0 for s in h["select_s"])
+    assert len(h["kl_reachable"]) == 3
+    assert np.isfinite(h["final_acc"])
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("policy", ("haccs", "oort", "grad-importance"))
+def test_policy_async_equals_sync(smoke_data, policy):
+    """The async server (zero ingest latency, sync refresh cadence)
+    replays the sync trace bitwise for history-aware policies too — the
+    shared ClientStats make the selection inputs identical."""
+    def run(server):
+        cfg = FLConfig(rounds=4, clients_per_round=4, local_steps=2,
+                       summary="py", selection=policy, num_clusters=3,
+                       eval_every=2, seed=4, server=server)
+        return run_federated(smoke_data, cfg,
+                             scenario=make_scenario("mobile-churn", 20,
+                                                    seed=3))
+    h_sync, h_async = run("sync"), run("async")
+    for key in ("selected", "completed", "acc", "refreshes", "sim_time"):
+        assert h_sync[key] == h_async[key], (policy, key)
