@@ -15,7 +15,10 @@ instead of letting a stray separator corrupt the record downstream.
 Free-form derived text (no ``=``) is allowed via ``text=`` for records
 nobody dict-parses.
 
-Schema history: **7** adds the ``policies/*`` selection-policy
+Schema history: **8** adds the ``frontend/*`` check-in front-end records
+(request-level serve latency p50/p99/p999 + sustained check-ins/sec at
+1M clients, and the bounded-queue admission/shed cell, DESIGN.md §12);
+7 adds the ``policies/*`` selection-policy
 tournament records (time-to-accuracy, kl-coverage, per-round selection
 overhead per preset x policy, leaderboard aggregates, and the
 ``policies/quota_fix/*`` bugfix-demonstration cell); 6 adds the ``obs/*``
@@ -27,7 +30,7 @@ durability records; 4 the async ``server/*`` records; 3 ``sharded/*``;
 """
 from __future__ import annotations
 
-SCHEMA_VERSION = 7
+SCHEMA_VERSION = 8
 
 
 def fmt_value(v) -> str:

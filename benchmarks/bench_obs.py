@@ -38,11 +38,11 @@ import time
 
 import numpy as np
 
+import repro.api as api
 import repro.obs as obs
 from benchmarks._record import emit
 from benchmarks.bench_server import run_server
 from repro.data.synthetic import FederatedDataset, small_spec
-from repro.fl import FLConfig, run_federated
 
 OVERHEAD_BUDGET = 0.02     # enabled tracer may add <2% to the critical path
 N_CLIENTS = 100_000        # the paper-scale fleet the claim is about
@@ -117,14 +117,16 @@ def hooks_per_round(seed: int = 0) -> float:
     property of the code path, not the fleet size."""
     data = FederatedDataset(small_spec(num_clients=64, num_classes=5,
                                        side=8, avg_samples=24), seed=seed)
-    cfg = FLConfig(rounds=6, clients_per_round=8, local_steps=1,
-                   summary="py", registry="streaming", clustering="online",
-                   num_clusters=4, refresh_max_age=3, refresh_kl=0.05,
-                   eval_every=6, seed=seed, server="async",
-                   server_refresh="staleness", ingest_delay_rounds=1,
-                   snapshot_max_age=2, drift_mass_trigger=0.1)
+    cfg = api.RunConfig(
+        rounds=6, clients_per_round=8, local_steps=1, summary="py",
+        refresh_max_age=3, refresh_kl=0.05, eval_every=6, seed=seed,
+        registry=api.RegistryConfig(kind="streaming"),
+        clustering=api.ClusteringConfig(kind="online", num_clusters=4),
+        server=api.ServerConfig(kind="async", refresh="staleness",
+                                ingest_delay_rounds=1, snapshot_max_age=2,
+                                drift_mass_trigger=0.1))
     with obs.observe() as ob:
-        run_federated(data, cfg)
+        api.run(data, cfg)
     return len(ob.tracer.events) / cfg.rounds
 
 

@@ -24,9 +24,9 @@ from __future__ import annotations
 
 import numpy as np
 
+import repro.api as api
 from benchmarks._record import emit
 from repro.data.synthetic import FederatedDataset, small_spec
-from repro.fl import FLConfig, run_federated
 from repro.policies import TOURNAMENT_POLICIES
 from repro.sim import DATA_HINTS, PRESET_NAMES, make_scenario
 
@@ -70,12 +70,15 @@ def run_tournament(policies=TOURNAMENT_POLICIES, presets=PRESET_NAMES, *,
                                 seed=seed)
         for policy in policies:
             scenario = make_scenario(preset, clients, seed=seed)
-            cfg = FLConfig(rounds=rounds, clients_per_round=8,
-                           local_steps=local_steps, model=model,
-                           summary="py", selection=policy, num_clusters=6,
-                           recluster_every=4, refresh_kl=0.05, eval_every=1,
-                           server=server, seed=seed)
-            h = run_federated(data, cfg, scenario=scenario)
+            cfg = api.RunConfig(
+                rounds=rounds, clients_per_round=8,
+                local_steps=local_steps, model=model, summary="py",
+                refresh_kl=0.05, eval_every=1, seed=seed,
+                clustering=api.ClusteringConfig(num_clusters=6,
+                                                recluster_every=4),
+                policy=api.PolicyConfig(name=policy),
+                server=api.ServerConfig(kind=server))
+            h = api.run(data, cfg, scenario=scenario)
             rows.append({
                 "name": f"policies/{preset}/{policy}",
                 "preset": preset,
@@ -147,11 +150,14 @@ def quota_fix_demo(*, rounds: int = 8, clients: int = 48, per_round: int = 16,
             scenario = make_scenario("pathological-noniid", clients,
                                      seed=seed,
                                      base_availability=availability)
-            cfg = FLConfig(rounds=rounds, clients_per_round=per_round,
-                           local_steps=1, summary="py", selection=policy,
-                           num_clusters=6, recluster_every=4,
-                           refresh_kl=0.05, eval_every=rounds, seed=seed)
-            h = run_federated(data, cfg, scenario=scenario)
+            cfg = api.RunConfig(
+                rounds=rounds, clients_per_round=per_round,
+                local_steps=1, summary="py", refresh_kl=0.05,
+                eval_every=rounds, seed=seed,
+                clustering=api.ClusteringConfig(num_clusters=6,
+                                                recluster_every=4),
+                policy=api.PolicyConfig(name=policy))
+            h = api.run(data, cfg, scenario=scenario)
             kls[policy].append(_kl_reach(h))
     fixed = float(np.mean(kls["haccs"]))
     legacy = float(np.mean(kls["haccs-legacy"]))

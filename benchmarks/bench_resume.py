@@ -96,28 +96,32 @@ def bench_log_append(records: int = 5000) -> float:
 def bench_resume_run(seed: int = 0, rounds: int = 3) -> dict:
     """End-to-end: crash at the last stage boundary, resume, complete —
     vs the same run never interrupted."""
+    import dataclasses
+
+    import repro.api as api
     from repro.data.synthetic import FederatedDataset, small_spec
-    from repro.fl import FLConfig, run_federated
     from repro.server.events import Stage
     from repro.sim import FaultPlan, ServerKilled
 
     data = FederatedDataset(small_spec(num_clients=16, num_classes=5,
                                        side=8, avg_samples=24), seed=seed)
-    cfg = FLConfig(rounds=rounds, clients_per_round=4, local_steps=1,
-                   summary="py", registry="streaming", num_clusters=3,
-                   recluster_every=2, eval_every=rounds, seed=seed,
-                   server="sync")
+    cfg = api.RunConfig(
+        rounds=rounds, clients_per_round=4, local_steps=1, summary="py",
+        eval_every=rounds, seed=seed,
+        registry=api.RegistryConfig(kind="streaming"),
+        clustering=api.ClusteringConfig(num_clusters=3, recluster_every=2))
     t0 = time.perf_counter()
-    run_federated(data, cfg)
+    api.run(data, cfg)
     plain_s = time.perf_counter() - t0
     with tempfile.TemporaryDirectory() as d:
         t0 = time.perf_counter()
         try:
-            run_federated(data, cfg, durable=d, faults=FaultPlan(
-                crash_points=((rounds - 1, Stage.TRAIN),)))
+            api.run(data, dataclasses.replace(
+                cfg, durability=api.DurabilityConfig(dir=d)),
+                faults=FaultPlan(crash_points=((rounds - 1, Stage.TRAIN),)))
         except ServerKilled:
             pass
-        run_federated(data, cfg, resume_from=d)
+        api.run(data, cfg, resume_from=d)
         resumed_s = time.perf_counter() - t0
     return {"plain_s": plain_s, "resumed_s": resumed_s,
             "overhead": resumed_s / max(plain_s, 1e-9)}

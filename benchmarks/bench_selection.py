@@ -12,9 +12,9 @@ from __future__ import annotations
 
 import numpy as np
 
+import repro.api as api
 from benchmarks._record import emit
 from repro.data.synthetic import FederatedDataset, small_spec
-from repro.fl import FLConfig, run_federated
 from repro.fl.system import SystemSpec
 from repro.sim import DATA_HINTS, PRESET_NAMES, make_scenario
 
@@ -34,12 +34,14 @@ def run(rounds: int = 16, clients: int = 60, target_acc: float = 0.85,
     rows = []
     for strategy, summary in (("haccs", "encoder"), ("random", "none"),
                               ("fastest", "none")):
-        cfg = FLConfig(rounds=rounds, clients_per_round=8, local_steps=8,
-                       summary=summary, selection=strategy, num_clusters=6,
-                       coreset_k=32, recluster_every=8, eval_every=1,
-                       seed=seed)
-        h = run_federated(data, cfg, SystemSpec(speed_sigma=1.0,
-                                                availability=0.8))
+        cfg = api.RunConfig(
+            rounds=rounds, clients_per_round=8, local_steps=8,
+            summary=summary, coreset_k=32, eval_every=1, seed=seed,
+            clustering=api.ClusteringConfig(num_clusters=6,
+                                            recluster_every=8),
+            policy=api.PolicyConfig(name=strategy))
+        h = api.run(data, cfg, system_spec=SystemSpec(speed_sigma=1.0,
+                                                      availability=0.8))
         rows.append({
             "name": f"selection/{strategy}",
             "strategy": strategy,
@@ -68,12 +70,15 @@ def run_scenarios(rounds: int = 8, clients: int = 48, seed: int = 0,
                                 seed=seed)
         for registry, clustering in combos:
             scenario = make_scenario(preset, clients, seed=seed)
-            cfg = FLConfig(rounds=rounds, clients_per_round=8, local_steps=4,
-                           summary="py", registry=registry,
-                           clustering=clustering, num_clusters=6,
-                           recluster_every=4, refresh_kl=0.05,
-                           eval_every=max(rounds - 1, 1), seed=seed)
-            h = run_federated(data, cfg, scenario=scenario)
+            cfg = api.RunConfig(
+                rounds=rounds, clients_per_round=8, local_steps=4,
+                summary="py", refresh_kl=0.05,
+                eval_every=max(rounds - 1, 1), seed=seed,
+                registry=api.RegistryConfig(kind=registry),
+                clustering=api.ClusteringConfig(kind=clustering,
+                                                num_clusters=6,
+                                                recluster_every=4))
+            h = api.run(data, cfg, scenario=scenario)
             kl = np.asarray(h["kl_coverage"], np.float64)
             rows.append({
                 "name": f"scenario/{preset}/{registry}-{clustering}",

@@ -28,7 +28,7 @@ import statistics
 import sys
 
 DEFAULT_GROUPS = ("summary", "clustering", "sharded", "server",
-                  "server_resume", "obs", "policies")
+                  "server_resume", "obs", "policies", "frontend")
 
 
 def group_records(report: dict,

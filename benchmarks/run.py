@@ -19,6 +19,9 @@ Prints ``name,us_per_call,derived`` CSV lines:
   * bench_policies    — §11 selection-policy tournament: time-to-accuracy
                         + kl-coverage per policy x preset, and the
                         quota-fix demonstration cell
+  * bench_frontend    — §12 check-in front end: request-serve latency
+                        percentiles + sustained check-ins/sec at 1M
+                        clients, and the bounded-queue admission cell
 
 and mirrors every CSV record into a machine-readable ``BENCH.json``
 (``--json PATH`` to relocate, ``--no-json`` to disable) so the perf
@@ -42,6 +45,7 @@ from benchmarks import (
     bench_clustering,
     bench_compression,
     bench_dryrun,
+    bench_frontend,
     bench_kernels,
     bench_obs,
     bench_policies,
@@ -65,6 +69,7 @@ BENCHES = (
     ("resume", bench_resume.main),
     ("obs", bench_obs.main),
     ("policies", bench_policies.main),
+    ("frontend", bench_frontend.main),
     ("compression", bench_compression.main),
     ("dryrun", bench_dryrun.main),
 )
@@ -134,7 +139,8 @@ def main(argv=None) -> None:
     print("name,us_per_call,derived")
     failures = []
     # schema history lives with the record format in benchmarks._record
-    # (7: policies/* tournament + quota-fix records; 6: obs/* overhead +
+    # (8: frontend/* check-in latency + admission records; 7: policies/*
+    # tournament + quota-fix records; 6: obs/* overhead +
     # server/percentiles/* latency-distribution records; 5:
     # server_resume/* durability; 4: async server/*; 3: sharded/*;
     # 2: scenario sweep)

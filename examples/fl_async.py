@@ -15,25 +15,30 @@ import argparse
 
 import numpy as np
 
+import repro.api as api
 from repro.data.synthetic import FederatedDataset, small_spec
-from repro.fl import FLConfig, run_federated
 from repro.sim import DATA_HINTS, PRESET_NAMES, Scenario, make_scenario
 
 
 def run_one(server: str, data, sc_config: dict, args) -> dict:
-    cfg = FLConfig(rounds=args.rounds, clients_per_round=8,
-                   local_steps=args.local_steps, summary=args.summary,
-                   registry=args.registry, clustering=args.clustering,
-                   num_clusters=6, recluster_every=4, refresh_kl=0.05,
-                   eval_every=max(args.rounds // 4, 1), seed=args.seed,
-                   server=server,
-                   server_refresh="staleness" if server == "async" else
-                                  "sync",
-                   ingest_delay_rounds=args.delay,
-                   snapshot_max_age=args.max_age,
-                   drift_mass_trigger=args.drift_mass)
-    return run_federated(data, cfg,
-                         scenario=Scenario.from_config(sc_config))
+    is_async = server == "async"
+    cfg = api.RunConfig(
+        rounds=args.rounds, clients_per_round=8,
+        local_steps=args.local_steps, summary=args.summary,
+        refresh_kl=0.05, eval_every=max(args.rounds // 4, 1),
+        seed=args.seed,
+        registry=api.RegistryConfig(kind=args.registry),
+        clustering=api.ClusteringConfig(kind=args.clustering,
+                                        num_clusters=6, recluster_every=4),
+        server=api.ServerConfig(
+            kind=server,
+            refresh="staleness" if is_async else "sync",
+            ingest_delay_rounds=args.delay,
+            snapshot_max_age=args.max_age,
+            drift_mass_trigger=args.drift_mass,
+            frontend=api.FrontendConfig(
+                kind=args.frontend if is_async else "none")))
+    return api.run(data, cfg, scenario=Scenario.from_config(sc_config))
 
 
 def main():
@@ -56,6 +61,9 @@ def main():
                     help="async snapshot staleness bound (rounds)")
     ap.add_argument("--drift-mass", type=float, default=0.05,
                     help="async background-refresh trigger")
+    ap.add_argument("--frontend", default="none",
+                    choices=["none", "poisson"],
+                    help="async check-in front end (DESIGN.md §12)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -92,6 +100,12 @@ def main():
           f"({srv['blocking_refreshes']} blocking), "
           f"{srv['snapshots_published']} snapshots, "
           f"{srv['events']} events")
+    fe = srv.get("frontend")
+    if fe:
+        p99 = max(ha["checkin_p99_s"]) if ha["checkin_p99_s"] else 0.0
+        print(f"  check-in front end: {fe['checkins']} check-ins, "
+              f"{fe['shed']} shed, {fe['slo_breaches']} SLO breaches, "
+              f"worst round p99 {p99 * 1e3:.3f}ms")
     print(f"  final acc  sync {hs['final_acc']:.3f}  "
           f"async {ha['final_acc']:.3f}   "
           f"sim time  sync {hs['sim_time'][-1]:.1f}  "

@@ -25,9 +25,9 @@ import argparse
 import json
 import os
 
+import repro.api as api
 import repro.obs as obs
 from repro.data.synthetic import FederatedDataset, small_spec
-from repro.fl import FLConfig, run_federated
 from repro.obs.export import validate_chrome_trace
 
 
@@ -48,19 +48,22 @@ def main():
     data = FederatedDataset(small_spec(num_clients=args.clients,
                                        num_classes=5, side=8,
                                        avg_samples=24), seed=args.seed)
-    cfg = FLConfig(rounds=args.rounds, clients_per_round=8, local_steps=1,
-                   summary="py", registry="streaming", clustering="online",
-                   num_clusters=4, refresh_max_age=3, refresh_kl=0.05,
-                   eval_every=max(args.rounds // 2, 1), seed=args.seed,
-                   server="async", server_refresh="staleness",
-                   ingest_delay_rounds=1, snapshot_max_age=args.max_age,
-                   drift_mass_trigger=0.1)
+    cfg = api.RunConfig(
+        rounds=args.rounds, clients_per_round=8, local_steps=1,
+        summary="py", refresh_max_age=3, refresh_kl=0.05,
+        eval_every=max(args.rounds // 2, 1), seed=args.seed,
+        registry=api.RegistryConfig(kind="streaming"),
+        clustering=api.ClusteringConfig(kind="online", num_clusters=4),
+        server=api.ServerConfig(kind="async", refresh="staleness",
+                                ingest_delay_rounds=1,
+                                snapshot_max_age=args.max_age,
+                                drift_mass_trigger=0.1))
 
     trace_path = os.path.join(args.out, "trace.json")
     metrics_path = os.path.join(args.out, "metrics.jsonl")
     with obs.observe(trace_path=trace_path, metrics_path=metrics_path,
                      kernel_profile=args.kernel_profile) as ob:
-        history = run_federated(data, cfg)
+        history = api.run(data, cfg)
 
     errors = validate_chrome_trace(json.load(open(trace_path)))
     assert not errors, errors
@@ -69,7 +72,8 @@ def main():
     print(f"wrote {metrics_path} ({len(ob.metrics.names())} metrics)")
 
     print(f"\nfinal accuracy {history['acc'][-1]:.3f}; snapshot age "
-          f"max {max(history['snapshot_age'])} (bound {cfg.snapshot_max_age})"
+          f"max {max(history['snapshot_age'])} "
+          f"(bound {cfg.server.snapshot_max_age})"
           f"\n\nper-stage latency (exact percentiles from the log-scale "
           f"histograms):")
     print(f"{'stage':36s} {'count':>6s} {'p50':>10s} {'p99':>10s} "

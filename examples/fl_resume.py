@@ -8,11 +8,11 @@
 Runs the same federation three times:
 
   1. uninterrupted — the reference trace;
-  2. durable + fault-injected — ``run_federated(..., durable=DIR)``
+  2. durable + fault-injected — ``durability=DurabilityConfig(dir=DIR)``
      journals every committed event to ``DIR/events.jsonl`` and cuts a
      checkpoint at each round boundary, and a ``FaultPlan`` kills the
      server at a chosen ``(round, stage)`` boundary;
-  3. resumed — ``run_federated(..., resume_from=DIR)`` restores the last
+  3. resumed — ``api.run(..., resume_from=DIR)`` restores the last
      checkpoint, replays the scenario, and completes the run.
 
 The demo then diffs the resumed trace against the uninterrupted one with
@@ -21,13 +21,14 @@ must match **bitwise** — and exits non-zero if they don't, so CI can run
 it as a smoke test.
 """
 import argparse
+import dataclasses
 import os
 import sys
 import tempfile
 
+import repro.api as api
 from repro.checkpoint import read_log
 from repro.data.synthetic import FederatedDataset, small_spec
-from repro.fl import FLConfig, run_federated
 from repro.server.events import Stage
 from repro.sim import (
     FaultPlan, PRESET_NAMES, Scenario, ServerKilled, make_scenario,
@@ -58,10 +59,12 @@ def main():
         num_clients=args.clients, num_classes=5, side=8, avg_samples=24),
         seed=args.seed)
     sc = make_scenario(args.preset, args.clients, seed=args.seed).to_config()
-    cfg = FLConfig(rounds=args.rounds, clients_per_round=8, local_steps=1,
-                   summary="py", registry=args.registry, num_clusters=4,
-                   recluster_every=2, eval_every=max(args.rounds // 3, 1),
-                   seed=args.seed, server=args.server)
+    cfg = api.RunConfig(
+        rounds=args.rounds, clients_per_round=8, local_steps=1,
+        summary="py", eval_every=max(args.rounds // 3, 1), seed=args.seed,
+        registry=api.RegistryConfig(kind=args.registry),
+        clustering=api.ClusteringConfig(num_clusters=4, recluster_every=2),
+        server=api.ServerConfig(kind=args.server))
     crash_round = (args.rounds - 1 if args.crash_round is None
                    else args.crash_round)
     crash = (crash_round, Stage[args.crash_stage])
@@ -69,15 +72,16 @@ def main():
     print(f"=== {args.server} server, {args.registry} registry, "
           f"{args.preset}, {args.rounds} rounds")
     print("--- run 1: uninterrupted (reference)")
-    h0 = run_federated(data, cfg, scenario=Scenario.from_config(sc))
+    h0 = api.run(data, cfg, scenario=Scenario.from_config(sc))
 
     workdir = args.dir or tempfile.mkdtemp(prefix="fl_resume_")
     print(f"--- run 2: durable in {workdir}, killed before round "
           f"{crash[0]} {crash[1].name}")
+    durable_cfg = dataclasses.replace(
+        cfg, durability=api.DurabilityConfig(dir=workdir))
     try:
-        run_federated(data, cfg, scenario=Scenario.from_config(sc),
-                      durable=workdir,
-                      faults=FaultPlan(crash_points=(crash,)))
+        api.run(data, durable_cfg, scenario=Scenario.from_config(sc),
+                faults=FaultPlan(crash_points=(crash,)))
         print("    crash point never fired (stage not reached)")
         sys.exit(2)
     except ServerKilled as e:
@@ -88,8 +92,8 @@ def main():
     print(f"    durable dir: events.jsonl + {len(ckpts)} checkpoint(s)")
 
     print("--- run 3: resumed from the durable dir")
-    h1 = run_federated(data, cfg, scenario=Scenario.from_config(sc),
-                       resume_from=workdir)
+    h1 = api.run(data, cfg, scenario=Scenario.from_config(sc),
+                 resume_from=workdir)
 
     records = read_log(os.path.join(workdir, "events.jsonl"))
     kinds = [r["type"] for r in records]

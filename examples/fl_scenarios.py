@@ -16,8 +16,8 @@ import argparse
 
 import numpy as np
 
+import repro.api as api
 from repro.data.synthetic import FederatedDataset, small_spec
-from repro.fl import FLConfig, run_federated
 from repro.sim import DATA_HINTS, PRESET_NAMES, make_scenario
 
 
@@ -27,13 +27,16 @@ def run_preset(preset: str, args) -> dict:
         num_clients=args.clients, num_classes=8, side=10, avg_samples=48,
         num_styles=4, alpha=alpha), seed=args.seed)
     scenario = make_scenario(preset, args.clients, seed=args.seed)
-    cfg = FLConfig(rounds=args.rounds, clients_per_round=8,
-                   local_steps=args.local_steps, summary=args.summary,
-                   registry=args.registry, clustering=args.clustering,
-                   server=args.server, num_clusters=6, coreset_k=32,
-                   recluster_every=4, refresh_kl=0.05,
-                   eval_every=max(args.rounds // 4, 1), seed=args.seed)
-    h = run_federated(data, cfg, scenario=scenario)
+    cfg = api.RunConfig(
+        rounds=args.rounds, clients_per_round=8,
+        local_steps=args.local_steps, summary=args.summary,
+        coreset_k=32, refresh_kl=0.05,
+        eval_every=max(args.rounds // 4, 1), seed=args.seed,
+        registry=api.RegistryConfig(kind=args.registry),
+        clustering=api.ClusteringConfig(kind=args.clustering,
+                                        num_clusters=6, recluster_every=4),
+        server=api.ServerConfig(kind=args.server))
+    h = api.run(data, cfg, scenario=scenario)
 
     print(f"\n=== {preset}  ({args.registry} registry, "
           f"{args.clustering} clustering, {args.server} server)")

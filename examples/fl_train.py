@@ -13,8 +13,8 @@ import argparse
 
 import numpy as np
 
+import repro.api as api
 from repro.data.synthetic import FederatedDataset, small_spec
-from repro.fl import FLConfig, run_federated
 from repro.fl.system import SystemSpec
 
 
@@ -31,25 +31,26 @@ def main():
     system = SystemSpec(speed_sigma=1.0, availability=0.85)
 
     runs = {
-        "haccs+encoder": FLConfig(rounds=args.rounds, clients_per_round=8,
-                                  local_steps=8, summary="encoder",
-                                  selection="haccs", num_clusters=6,
-                                  coreset_k=32, recluster_every=4,
-                                  drift_start=args.drift_start,
-                                  drift_per_round=0.15, refresh_kl=0.08),
-        "random": FLConfig(rounds=args.rounds, clients_per_round=8,
-                           local_steps=8, summary="none", selection="random",
-                           drift_start=args.drift_start,
-                           drift_per_round=0.15),
-        "fastest-only": FLConfig(rounds=args.rounds, clients_per_round=8,
-                                 local_steps=8, summary="none",
-                                 selection="fastest",
-                                 drift_start=args.drift_start,
-                                 drift_per_round=0.15),
+        "haccs+encoder": api.RunConfig(
+            rounds=args.rounds, clients_per_round=8, local_steps=8,
+            summary=api.Summary.ENCODER, coreset_k=32, refresh_kl=0.08,
+            clustering=api.ClusteringConfig(num_clusters=6,
+                                            recluster_every=4),
+            policy=api.PolicyConfig(name="haccs"),
+            drift_start=args.drift_start, drift_per_round=0.15),
+        "random": api.RunConfig(
+            rounds=args.rounds, clients_per_round=8, local_steps=8,
+            summary=api.Summary.NONE, policy=api.PolicyConfig(name="random"),
+            drift_start=args.drift_start, drift_per_round=0.15),
+        "fastest-only": api.RunConfig(
+            rounds=args.rounds, clients_per_round=8, local_steps=8,
+            summary=api.Summary.NONE,
+            policy=api.PolicyConfig(name="fastest"),
+            drift_start=args.drift_start, drift_per_round=0.15),
     }
     results = {}
     for name, cfg in runs.items():
-        h = run_federated(data, cfg, system)
+        h = api.run(data, cfg, system_spec=system)
         results[name] = h
         print(f"\n=== {name}")
         for r in range(0, args.rounds, max(args.rounds // 8, 1)):

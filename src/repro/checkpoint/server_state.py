@@ -303,10 +303,10 @@ def _restore_batch(st: dict) -> SummaryBatch:
 
 
 def server_state(queue: EventQueue, ingest_q: IngestQueue,
-                 store: SnapshotStore,
-                 refresher: ClusterRefresher) -> dict:
+                 store: SnapshotStore, refresher: ClusterRefresher,
+                 frontend=None, admission=None) -> dict:
     """The async server's machinery at an event boundary."""
-    return {
+    st = {
         "queue": {"seq": int(queue._seq), "processed": int(queue.processed),
                   "events": [_event_state(ev) for ev in queue.pending()]},
         "ingest": {"enqueued": int(ingest_q.enqueued_batches),
@@ -319,23 +319,36 @@ def server_state(queue: EventQueue, ingest_q: IngestQueue,
             "version": int(refresher._version),
             "pending_ids": np.asarray(sorted(refresher._pending_ids),
                                       np.int64),
+            "slo_rebuild": bool(refresher._slo_rebuild),
             "blocking_builds": int(refresher.blocking_builds),
+            "slo_builds": int(refresher.slo_builds),
             "background_builds": int(refresher.background_builds),
             "background_s": float(refresher.background_s),
             "skipped_empty": int(refresher.skipped_empty),
         },
     }
+    # the check-in front end (DESIGN.md §12): arrival schedules are pure
+    # per-round functions of (seed, round) and need no state; what must
+    # survive a kill is the admission controller's deferred store (the
+    # shed-with-retry-after summaries) and the front end's counters
+    if frontend is not None:
+        st["frontend"] = frontend.state()
+    if admission is not None:
+        st["admission"] = admission.state()
+    return st
 
 
-def restore_server(ctx, st: dict) -> tuple[EventQueue, IngestQueue,
-                                           SnapshotStore, ClusterRefresher]:
-    """Rebuild the async server machinery from a ``server_state`` dict."""
+def restore_server(ctx, st: dict):
+    """Rebuild the async server machinery from a ``server_state`` dict.
+    Returns ``(queue, ingest_q, store, refresher, arrivals, frontend,
+    admission)`` — the front-end triple is ``(None, None, None)`` when
+    the config has no front end."""
     cfg = ctx.cfg
     queue = EventQueue()
     queue.load([_restore_event(e) for e in st["queue"]["events"]],
                seq=int(st["queue"]["seq"]),
                processed=int(st["queue"]["processed"]))
-    ingest_q = IngestQueue()
+    ingest_q = IngestQueue(max_depth=cfg.ingest_max_depth)
     ingest_q.load([_restore_batch(b) for b in st["ingest"]["batches"]],
                   enqueued=int(st["ingest"]["enqueued"]),
                   drained=int(st["ingest"]["drained"]),
@@ -350,8 +363,19 @@ def restore_server(ctx, st: dict) -> tuple[EventQueue, IngestQueue,
     refresher._version = int(rst["version"])
     refresher._pending_ids = {int(c) for c in
                               np.asarray(rst["pending_ids"], np.int64)}
+    refresher._slo_rebuild = bool(rst.get("slo_rebuild", False))
     refresher.blocking_builds = int(rst["blocking_builds"])
+    refresher.slo_builds = int(rst.get("slo_builds", 0))
     refresher.background_builds = int(rst["background_builds"])
     refresher.background_s = float(rst["background_s"])
     refresher.skipped_empty = int(rst["skipped_empty"])
-    return queue, ingest_q, store, refresher
+    arrivals = frontend = admission = None
+    if cfg.frontend != "none":
+        from repro.server.async_rounds import build_frontend
+        arrivals, frontend, admission = build_frontend(ctx)
+        _expect("frontend" in st and "admission" in st,
+                "front-end configured but checkpoint has no front-end "
+                "state (checkpoint from a front-end-less run?)")
+        frontend.load(st["frontend"])
+        admission.load(st["admission"])
+    return queue, ingest_q, store, refresher, arrivals, frontend, admission

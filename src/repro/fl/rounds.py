@@ -125,6 +125,25 @@ class FLConfig:
     drift_mass_trigger: float = 0.05 # staleness: background refresh when
                                      # this fraction of the live fleet
                                      # re-ingested/churned since snapshot
+    # --- check-in front end (DESIGN.md §12; requires server="async") ---
+    frontend: str = "none"           # none | poisson (request-level
+                                     # check-in storm served from the
+                                     # published snapshot)
+    checkins_per_client: float = 2.0 # mean check-ins per available client
+                                     # per round (Poisson)
+    checkin_window_s: float = 60.0   # simulated serving window per round
+    frontend_workers: int = 4        # parallel deciders (latency model)
+    frontend_service_us: float = 50.0  # modeled per-check-in service time
+    frontend_slo_p99_s: float = 0.0  # round p99 SLO; breach requests an
+                                     # early background rebuild (0 = off)
+    ingest_max_depth: int = 0        # bound on in-flight summaries (rows);
+                                     # 0 = unbounded (the no-shed pin)
+    admission_retry_after: int = 1   # rounds a shed summary waits before
+                                     # its client re-offers it
+    checkin_stall_model_s: float = 0.0  # modeled service stall when the
+                                     # round rebuilt blocking (the decision
+                                     # is deterministic; wall seconds are
+                                     # not, so they never enter the trace)
     num_clusters: int = 8
     coreset_k: int = 64
     encoder_dim: int = 32
@@ -267,6 +286,8 @@ class RoundContext:
             raise ValueError(f"unknown server: {cfg.server}")
         if cfg.server_refresh not in ("sync", "staleness"):
             raise ValueError(f"unknown server_refresh: {cfg.server_refresh}")
+        if cfg.frontend not in ("none", "poisson"):
+            raise ValueError(f"unknown frontend: {cfg.frontend}")
         self.maintainer = None
         online_policy = OnlinePolicy(inertia_ratio=cfg.online_inertia_ratio,
                                      reseed_every=cfg.online_reseed_every)
@@ -309,7 +330,12 @@ class RoundContext:
             # round-critical path; snapshot lineage for async runs
             "server_scan_s": [], "server_cluster_s": [], "server_drain_s": [],
             "overhead_critical_s": [], "snapshot_version": [],
-            "snapshot_age": []}
+            "snapshot_age": [],
+            # check-in front end (DESIGN.md §12): per-round stream size,
+            # shed set size and modeled tail latency — empty lists when
+            # no front end is configured (the key set stays fixed so
+            # checkpoints restore across server modes)
+            "checkins": [], "checkins_shed": [], "checkin_p99_s": []}
         self.sim_time = 0.0
         self.dropped_rounds = 0
         self.recluster_count = 0
@@ -751,7 +777,13 @@ def run_federated(data: FederatedDataset, cfg: FLConfig,
                   system_spec: SystemSpec | None = None,
                   scenario=None, *, durable=None, resume_from: str | None =
                   None, faults=None) -> dict:
-    """Run one federated training.
+    """Run one federated training (legacy flat-config entry point).
+
+    This is now a thin shim over the typed ``repro.api`` surface: the
+    flat ``FLConfig`` is lifted into a validated ``repro.api.RunConfig``
+    (same unknown-string errors, plus the cross-field contracts) and
+    handed to the shared executor, so both entry points produce
+    identical histories, traces and checkpoints.
 
     Fault-tolerance knobs (DESIGN.md §9):
 
@@ -768,6 +800,23 @@ def run_federated(data: FederatedDataset, cfg: FLConfig,
         and, for the async server, seeded ingest-batch loss with bounded
         retry/backoff.
     """
+    # lazy: repro.api imports FLConfig from this module at load time
+    from repro.api import RunConfig
+    return _execute(data, RunConfig.from_flconfig(cfg),
+                    system_spec=system_spec, scenario=scenario,
+                    durable=durable, resume_from=resume_from, faults=faults)
+
+
+def _execute(data: FederatedDataset, run_cfg, *,
+             system_spec: SystemSpec | None = None, scenario=None,
+             durable=None, resume_from: str | None = None,
+             faults=None) -> dict:
+    """Shared executor behind ``repro.api.run`` and the legacy
+    ``run_federated`` shim.  ``run_cfg`` is a validated
+    ``repro.api.RunConfig``; its ``to_dict()`` form is what travels in
+    the durable-log header and the history ``config`` echo."""
+    cfg = run_cfg.to_flconfig()
+    cfg_dict = run_cfg.to_dict()
     spec = data.spec
     if scenario is None:
         scenario = LegacySystemScenario(
@@ -799,7 +848,7 @@ def run_federated(data: FederatedDataset, cfg: FLConfig,
             raise ValueError(
                 "resume_from and durable.dir must agree — a resumed run "
                 "keeps appending to the durable directory it resumes from")
-        session = DurableSession(dur, dataclasses.asdict(cfg),
+        session = DurableSession(dur, cfg_dict,
                                  scenario.to_config(), resume=True)
         ckpt = session.latest_checkpoint()
         if ckpt is not None:
@@ -811,18 +860,22 @@ def run_federated(data: FederatedDataset, cfg: FLConfig,
             start_round = rnd + 1
         session.log_resume(start_round)
     elif durable is not None:
-        session = DurableSession(_as_durability(durable),
-                                 dataclasses.asdict(cfg),
+        session = DurableSession(_as_durability(durable), cfg_dict,
                                  scenario.to_config(), resume=False)
     try:
         if cfg.server == "async":
             # imported lazily: repro.server imports this module's
             # RoundContext
             from repro.server.async_rounds import drive_async
-            return drive_async(ctx, session=session, faults=injector,
-                               start_round=start_round, restored=server_st)
-        return _drive_sync(ctx, session=session, faults=injector,
-                           start_round=start_round)
+            h = drive_async(ctx, session=session, faults=injector,
+                            start_round=start_round, restored=server_st)
+        else:
+            h = _drive_sync(ctx, session=session, faults=injector,
+                            start_round=start_round)
     finally:
         if session is not None:
             session.close()
+    # echo the typed config with the results — added post-finish so the
+    # checkpointed history key set stays fixed across server modes
+    h["config"] = cfg_dict
+    return h

@@ -1,10 +1,29 @@
 """Asynchronous pipelined selection server (DESIGN.md §8): deterministic
 event engine, versioned immutable registry snapshots, summary-ingest
 queue, background clustering refresher with a bounded-staleness policy,
-and the event-driven round driver behind
+the request-level check-in front end (DESIGN.md §12: seeded arrival
+process, admission control/backpressure, SLO-aware staleness), and the
+event-driven round driver behind
 ``repro.fl.run_federated(..., server="async")``."""
+from repro.server.admission import (  # noqa: F401
+    AdmissionController,
+    AdmissionDecision,
+)
+from repro.server.arrivals import (  # noqa: F401
+    ArrivalConfig,
+    ArrivalProcess,
+    ArrivalSchedule,
+)
 from repro.server.events import Event, EventQueue, Stage  # noqa: F401
-from repro.server.ingest import IngestQueue, SummaryBatch  # noqa: F401
+from repro.server.frontend import (  # noqa: F401
+    CheckinFrontend,
+    CheckinReport,
+)
+from repro.server.ingest import (  # noqa: F401
+    IngestOverflow,
+    IngestQueue,
+    SummaryBatch,
+)
 from repro.server.refresher import (  # noqa: F401
     ClusterRefresher,
     StalenessPolicy,

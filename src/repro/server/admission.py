@@ -1,0 +1,230 @@
+"""Admission control + backpressure for the summary-ingest queue
+(DESIGN.md §12).
+
+The bounded ``IngestQueue`` (``max_depth`` in-flight summary rows) turns
+overload into an explicit decision instead of unbounded memory growth.
+This controller makes that decision once per round, at the COMPUTE
+stage, before anything is enqueued:
+
+  * **capacity** — at most ``ingest_q.capacity()`` new rows are admitted
+    this round; the rest are *shed* with a retry-after (the client keeps
+    its computed summary locally and re-offers it ``retry_after`` rounds
+    later — no recompute, and the drift scan's in-flight dedup keeps it
+    from being re-issued meanwhile);
+  * **priority lanes** — *drifted* clients (stale by KL, not by age:
+    their data actually moved) jump the queue, both among fresh offers
+    and among deferred re-offers, so backpressure sheds routine age
+    refreshes first and distribution shifts reach the clusterer soonest;
+  * **FIFO within a lane** — deferred re-offers are served before new
+    offers of the same lane (oldest data first), so no client starves.
+
+Everything is a pure function of deterministic inputs (queue depth, the
+stale set, the lane flags), so the shed set replays bitwise across runs
+and through kill-and-resume — the controller's deferred store is part of
+the checkpointed server state.  With ``max_depth == 0`` (unbounded) the
+controller is a strict pass-through: one batch, original order — the
+no-shed configuration the differential harness pins ≡ plain async.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import repro.obs as obs
+
+
+@dataclasses.dataclass
+class DeferredEntry:
+    """One shed summary waiting out its retry-after."""
+    client: int
+    compute_round: int         # round the summary's data reflects
+    due_round: int             # earliest round it may be re-offered
+    priority: bool             # drifted lane
+    order: int                 # global FIFO tiebreak (assignment order)
+    summary: np.ndarray
+    fresh_row: np.ndarray
+    retries: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionDecision:
+    """One round's outcome: what to enqueue, who was shed."""
+    # (compute_round, {client: summary}, {client: fresh_row}) per batch,
+    # in enqueue order — deferred re-offers batch separately because
+    # their data is older than this round
+    batches: list
+    shed: list                 # client ids shed *this* round (fresh offers)
+    deferred_served: int       # re-offers admitted this round
+
+
+class AdmissionController:
+    """Round-granular admission decisions over the bounded ingest queue."""
+
+    def __init__(self, max_depth: int = 0, retry_after: int = 1,
+                 priority_lanes: bool = True, metrics=None):
+        if retry_after < 1:
+            raise ValueError("retry_after must be >= 1 round")
+        self.max_depth = int(max_depth)
+        self.retry_after = int(retry_after)
+        self.priority_lanes = bool(priority_lanes)
+        self.metrics = metrics
+        self._deferred: list[DeferredEntry] = []
+        self._order = 0
+        self.admitted_total = 0
+        self.shed_total = 0
+        self.deferred_served_total = 0
+
+    # ------------------------------------------------------------------
+
+    def in_flight(self) -> set:
+        """Clients holding a shed-but-pending summary (scan dedup — the
+        drift scan must not re-issue a refresh the client already
+        computed and will retry)."""
+        return {e.client for e in self._deferred}
+
+    def evict(self, departed) -> None:
+        """Departed clients take their pending summaries with them."""
+        if len(self._deferred) == 0:
+            return
+        gone = {int(c) for c in departed}
+        if gone:
+            self._deferred = [e for e in self._deferred
+                              if e.client not in gone]
+
+    # ------------------------------------------------------------------
+
+    def plan(self, rnd: int, ingest_q, summaries: dict, fresh,
+             priority_ids=None) -> AdmissionDecision:
+        """Decide this round's enqueue set.  ``summaries`` is the fresh
+        COMPUTE output in stale-scan order; ``fresh`` is indexable by
+        client id; ``priority_ids`` flags the drifted lane."""
+        priority_ids = priority_ids or set()
+        if self.max_depth <= 0:
+            # unbounded: strict pass-through (single batch, original
+            # order) — the bitwise-pinned no-shed configuration
+            if not summaries:
+                return AdmissionDecision([], [], 0)
+            rows = {c: np.asarray(fresh[c]) for c in summaries}
+            self.admitted_total += len(summaries)
+            return AdmissionDecision([(int(rnd), dict(summaries), rows)],
+                                     [], 0)
+
+        capacity = ingest_q.capacity()
+        admitted: list[DeferredEntry] = []
+        shed: list[int] = []
+        deferred_served = 0
+
+        # lane 1: deferred re-offers that are due, priority first then
+        # global FIFO (stable sort on the assignment counter)
+        due = [e for e in self._deferred if e.due_round <= rnd]
+        if self.priority_lanes:
+            due.sort(key=lambda e: (not e.priority, e.order))
+        else:
+            due.sort(key=lambda e: e.order)
+        taken = []
+        for e in due:
+            if len(admitted) < capacity:
+                admitted.append(e)
+                taken.append(e)
+                deferred_served += 1
+            else:
+                e.due_round = rnd + self.retry_after
+                e.retries += 1
+        if taken:
+            taken_ids = {e.client for e in taken}
+            self._deferred = [e for e in self._deferred
+                              if e.client not in taken_ids]
+
+        # lane 2: this round's fresh offers, drifted lane first, scan
+        # order within each lane
+        new = list(summaries)
+        if self.priority_lanes:
+            new = ([c for c in new if c in priority_ids]
+                   + [c for c in new if c not in priority_ids])
+        for c in new:
+            if len(admitted) < capacity:
+                self._order += 1
+                admitted.append(DeferredEntry(
+                    client=int(c), compute_round=int(rnd),
+                    due_round=int(rnd), priority=c in priority_ids,
+                    order=self._order, summary=summaries[c],
+                    fresh_row=np.asarray(fresh[c])))
+            else:
+                self._order += 1
+                self._deferred.append(DeferredEntry(
+                    client=int(c), compute_round=int(rnd),
+                    due_round=int(rnd + self.retry_after),
+                    priority=c in priority_ids, order=self._order,
+                    summary=summaries[c],
+                    fresh_row=np.asarray(fresh[c])))
+                shed.append(int(c))
+
+        # group the admitted set into batches by compute round (oldest
+        # data first), preserving admission order inside each batch
+        batches: list = []
+        by_round: dict[int, tuple[dict, dict]] = {}
+        for e in admitted:
+            summ, rows = by_round.setdefault(e.compute_round, ({}, {}))
+            summ[e.client] = e.summary
+            rows[e.client] = e.fresh_row
+        for cr in sorted(by_round):
+            summ, rows = by_round[cr]
+            batches.append((int(cr), summ, rows))
+
+        self.admitted_total += len(admitted)
+        self.shed_total += len(shed)
+        self.deferred_served_total += deferred_served
+        if self.metrics is not None:
+            self.metrics.counter("frontend/admitted").inc(len(admitted))
+            if shed:
+                self.metrics.counter("frontend/shed").inc(len(shed))
+            if deferred_served:
+                self.metrics.counter("frontend/deferred_served").inc(
+                    deferred_served)
+            self.metrics.gauge("frontend/queue_depth").set(ingest_q.depth())
+        if shed:
+            obs.instant("admission/shed", cat="frontend", round=rnd,
+                        shed=len(shed), retry_after=self.retry_after)
+        return AdmissionDecision(batches, shed, deferred_served)
+
+    # ------------------------------------------------------------------
+    # checkpointing
+
+    def state(self) -> dict:
+        ents = sorted(self._deferred, key=lambda e: e.order)
+        return {
+            "order": int(self._order),
+            "admitted_total": int(self.admitted_total),
+            "shed_total": int(self.shed_total),
+            "deferred_served_total": int(self.deferred_served_total),
+            "clients": np.asarray([e.client for e in ents], np.int64),
+            "compute_rounds": np.asarray([e.compute_round for e in ents],
+                                         np.int64),
+            "due_rounds": np.asarray([e.due_round for e in ents], np.int64),
+            "priorities": np.asarray([e.priority for e in ents], bool),
+            "orders": np.asarray([e.order for e in ents], np.int64),
+            "retries": np.asarray([e.retries for e in ents], np.int64),
+            "summaries": (np.stack([e.summary for e in ents])
+                          if ents else None),
+            "fresh_rows": (np.stack([e.fresh_row for e in ents])
+                           if ents else None),
+        }
+
+    def load(self, st: dict) -> None:
+        self._order = int(st["order"])
+        self.admitted_total = int(st["admitted_total"])
+        self.shed_total = int(st["shed_total"])
+        self.deferred_served_total = int(st["deferred_served_total"])
+        self._deferred = []
+        clients = np.asarray(st["clients"], np.int64)
+        for i, c in enumerate(clients):
+            self._deferred.append(DeferredEntry(
+                client=int(c),
+                compute_round=int(st["compute_rounds"][i]),
+                due_round=int(st["due_rounds"][i]),
+                priority=bool(st["priorities"][i]),
+                order=int(st["orders"][i]),
+                summary=np.asarray(st["summaries"][i]),
+                fresh_row=np.asarray(st["fresh_rows"][i]),
+                retries=int(st["retries"][i])))

@@ -36,14 +36,37 @@ registry × clustering backends.
 """
 from __future__ import annotations
 
+import numpy as np
+
 import repro.obs as obs
 from repro.checkpoint.server_state import (
     context_state, restore_server, server_state,
 )
+from repro.server.admission import AdmissionController
+from repro.server.arrivals import ArrivalConfig, ArrivalProcess
 from repro.server.events import EventQueue, Stage
+from repro.server.frontend import CheckinFrontend
 from repro.server.ingest import IngestQueue
 from repro.server.refresher import ClusterRefresher, StalenessPolicy
 from repro.server.snapshot import SnapshotStore, capture
+
+
+def build_frontend(ctx):
+    """(arrivals, frontend, admission) for ``cfg.frontend != "none"`` —
+    shared by the fresh-start and checkpoint-restore paths so both build
+    identically configured machinery."""
+    cfg = ctx.cfg
+    arrivals = ArrivalProcess(ArrivalConfig(
+        rate=cfg.checkins_per_client, window_s=cfg.checkin_window_s,
+        seed=cfg.seed))
+    frontend = CheckinFrontend(
+        workers=cfg.frontend_workers,
+        service_s=cfg.frontend_service_us * 1e-6,
+        slo_p99_s=cfg.frontend_slo_p99_s, metrics=ctx.metrics)
+    admission = AdmissionController(
+        max_depth=cfg.ingest_max_depth,
+        retry_after=cfg.admission_retry_after, metrics=ctx.metrics)
+    return arrivals, frontend, admission
 
 
 def drive_async(ctx, session=None, faults=None, start_round: int = 0,
@@ -63,10 +86,11 @@ def drive_async(ctx, session=None, faults=None, start_round: int = 0,
     """
     cfg = ctx.cfg
     if restored is not None:
-        queue, ingest_q, store, refresher = restore_server(ctx, restored)
+        queue, ingest_q, store, refresher, arrivals, frontend, admission = \
+            restore_server(ctx, restored)
     else:
         queue = EventQueue()
-        ingest_q = IngestQueue()
+        ingest_q = IngestQueue(max_depth=cfg.ingest_max_depth)
         # seed snapshot: the pre-training server state (no summaries, the
         # all-zeros assignment the sync loop also starts from)
         store = SnapshotStore(capture(0, -1, ctx.registry, ctx.assignment,
@@ -75,6 +99,9 @@ def drive_async(ctx, session=None, faults=None, start_round: int = 0,
             ctx, store, mode=cfg.server_refresh,
             policy=StalenessPolicy(max_snapshot_age=cfg.snapshot_max_age,
                                    drift_mass_trigger=cfg.drift_mass_trigger))
+        arrivals = frontend = admission = None
+        if cfg.frontend != "none":
+            arrivals, frontend, admission = build_frontend(ctx)
     state: dict[int, dict] = {}   # per-round pipeline state, keyed by round
 
     def schedule_round(rnd: int) -> None:
@@ -85,6 +112,8 @@ def drive_async(ctx, session=None, faults=None, start_round: int = 0,
         queue.push(rnd, Stage.SCAN, "scan", rnd)
         queue.push(rnd, Stage.COMPUTE, "compute", rnd)
         queue.push(rnd, Stage.REFRESH, "refresh", rnd)
+        if frontend is not None:
+            queue.push(rnd, Stage.CHECKIN, "checkin", rnd)
         queue.push(rnd, Stage.SELECT, "select", rnd)
         queue.push(rnd, Stage.TRAIN, "train", rnd)
 
@@ -92,8 +121,11 @@ def drive_async(ctx, session=None, faults=None, start_round: int = 0,
         rnd = ev.payload
         plan, fresh = ctx.begin_round(rnd)
         state[rnd] = {"plan": plan, "fresh": fresh, "stale": [],
-                      "times": {}, "wall": 0.0, "blocking": 0.0}
+                      "times": {}, "wall": 0.0, "blocking": 0.0,
+                      "shed": [], "checkin": None}
         refresher.note_churn(plan)
+        if admission is not None:
+            admission.evict(plan.departed)
 
     def on_publish(ev) -> None:
         store.publish(ev.payload)
@@ -127,17 +159,15 @@ def drive_async(ctx, session=None, faults=None, start_round: int = 0,
     def on_scan(ev) -> None:
         rnd = ev.payload
         st = state[rnd]
+        exclude = ingest_q.in_flight()
+        if admission is not None:
+            # shed-but-pending summaries are also in flight: the client
+            # holds a computed summary it will re-offer after retry-after
+            exclude = exclude | admission.in_flight()
         st["stale"] = ctx.scan_stale(rnd, st["plan"], st["fresh"],
-                                     exclude=ingest_q.in_flight())
+                                     exclude=exclude)
 
-    def on_compute(ev) -> None:
-        rnd = ev.payload
-        st = state[rnd]
-        summaries, times, wall = ctx.compute_summaries(
-            rnd, st["stale"], st["plan"].drift)
-        st["times"], st["wall"] = times, wall
-        batch = ingest_q.enqueue(rnd, cfg.ingest_delay_rounds, summaries,
-                                 st["fresh"])
+    def _push_batch(rnd: int, batch) -> None:
         if batch is not None and batch.ready_round < cfg.rounds:
             # wake the drain when the latency elapses; zero-latency
             # batches land this round, after COMPUTE but before REFRESH.
@@ -147,6 +177,31 @@ def drive_async(ctx, session=None, faults=None, start_round: int = 0,
             stage = Stage.INGEST if batch.ready_round == rnd else Stage.DRAIN
             queue.push(batch.ready_round, stage, "drain", batch.ready_round)
 
+    def on_compute(ev) -> None:
+        rnd = ev.payload
+        st = state[rnd]
+        summaries, times, wall = ctx.compute_summaries(
+            rnd, st["stale"], st["plan"].drift)
+        st["times"], st["wall"] = times, wall
+        if admission is None:
+            _push_batch(rnd, ingest_q.enqueue(rnd, cfg.ingest_delay_rounds,
+                                              summaries, st["fresh"]))
+            return
+        # admission control (DESIGN.md §12): drifted clients — stale by
+        # KL while their row is still young — ride the priority lane;
+        # age-refreshes are shed first under backpressure
+        last = np.asarray(ctx.registry.last_refresh, np.int64)
+        priority = {c for c in summaries
+                    if last[c] >= 0 and rnd - int(last[c])
+                    < cfg.refresh_max_age}
+        decision = admission.plan(rnd, ingest_q, summaries, st["fresh"],
+                                  priority_ids=priority)
+        st["shed"] = decision.shed
+        for compute_round, summ, rows in decision.batches:
+            _push_batch(rnd, ingest_q.enqueue(
+                compute_round, cfg.ingest_delay_rounds, summ, rows,
+                ready_round=rnd + cfg.ingest_delay_rounds))
+
     def on_refresh(ev) -> None:
         rnd = ev.payload
         st = state[rnd]
@@ -154,6 +209,22 @@ def drive_async(ctx, session=None, faults=None, start_round: int = 0,
         st["blocking"] = blocking
         if background is not None and rnd + 1 < cfg.rounds:
             queue.push(rnd + 1, Stage.PUBLISH, "publish", background)
+
+    def on_checkin(ev) -> None:
+        rnd = ev.payload
+        st = state[rnd]
+        sched = arrivals.schedule(rnd, st["plan"].available)
+        # the stall is *modeled*, gated on the (deterministic) decision
+        # that this round rebuilt blocking — never the measured wall
+        # seconds, which would leak JIT/hardware jitter into the pinned
+        # checkin_p99_s trace
+        stall = (cfg.checkin_stall_model_s if st["blocking"] > 0.0
+                 else 0.0)
+        report = frontend.serve(sched, store.latest(), st["plan"].active,
+                                stall_s=stall)
+        st["checkin"] = report
+        if report.slo_breached:
+            refresher.request_early_rebuild()
 
     def on_select(ev) -> None:
         rnd = ev.payload
@@ -174,6 +245,12 @@ def drive_async(ctx, session=None, faults=None, start_round: int = 0,
                           st["times"], st["wall"], critical_s=critical,
                           snapshot_version=st["snap"].version,
                           snapshot_age=st["snap"].age(rnd))
+        if frontend is not None:
+            rep = st["checkin"]
+            h = ctx.history
+            h["checkins"].append(0 if rep is None else rep.checkins)
+            h["checkins_shed"].append(len(st["shed"]))
+            h["checkin_p99_s"].append(0.0 if rep is None else rep.p99_s)
         if rnd + 1 < cfg.rounds:
             schedule_round(rnd + 1)
 
@@ -200,11 +277,13 @@ def drive_async(ctx, session=None, faults=None, start_round: int = 0,
                     "round": rnd,
                     "context": context_state(ctx),
                     "server": server_state(queue, ingest_q, store,
-                                           refresher)})
+                                           refresher, frontend=frontend,
+                                           admission=admission)})
 
     queue.run({"membership": on_membership, "publish": on_publish,
                "drain": on_drain, "scan": on_scan, "compute": on_compute,
-               "refresh": on_refresh, "select": on_select,
+               "refresh": on_refresh, "checkin": on_checkin,
+               "select": on_select,
                "train": on_train}, before=before, after=after)
 
     history = ctx.finish()
@@ -218,6 +297,16 @@ def drive_async(ctx, session=None, faults=None, start_round: int = 0,
         "background_refreshes": refresher.background_builds,
         "background_s": refresher.background_s,
     }
+    if frontend is not None:
+        history["server"]["frontend"] = {
+            "checkins": frontend.total_checkins,
+            "slo_breaches": frontend.slo_breaches,
+            "slo_builds": refresher.slo_builds,
+            "admitted": admission.admitted_total,
+            "shed": admission.shed_total,
+            "deferred_served": admission.deferred_served_total,
+            "still_deferred": len(admission.in_flight()),
+        }
     if faults is not None:
         history["server"]["faults"] = faults.counters()
     return history

@@ -4,7 +4,8 @@
 The server's unit of simulated time is the scenario's round clock: every
 event is keyed by ``(round_idx, stage, seq)`` where ``stage`` is the fixed
 intra-round pipeline order (membership → publish → drain → scan → compute
-→ ingest → refresh → select → train) and ``seq`` is a monotonically
+→ ingest → refresh → checkin → select → train) and ``seq`` is a
+monotonically
 increasing insertion counter that breaks ties.  Sim *seconds* within a
 round come from the round plan's deadline semantics (``fl.rounds``), so
 the engine never orders by wall-clock floats — two runs with the same
@@ -35,8 +36,10 @@ class Stage(enum.IntEnum):
     COMPUTE = 4      # stale clients recompute summaries (client-side)
     INGEST = 5       # zero-latency batches land (degenerate sync path)
     REFRESH = 6      # clustering refresher policy step
-    SELECT = 7       # selection reads the freshest complete snapshot
-    TRAIN = 8        # local SGD + aggregation + clock accounting
+    CHECKIN = 7      # request-level check-in storm is answered from the
+                     # published snapshot (front end, DESIGN.md §12)
+    SELECT = 8       # selection reads the freshest complete snapshot
+    TRAIN = 9        # local SGD + aggregation + clock accounting
 
 
 @dataclasses.dataclass(frozen=True, order=True)

@@ -1,0 +1,146 @@
+"""Request-level check-in front end (DESIGN.md §12).
+
+Answers each check-in from the *current published snapshot* — the same
+``SnapshotStore.latest()`` pointer read selection uses, so a check-in is
+an O(1) gather against immutable state no matter how many millions of
+clients arrive.  What the front end adds on top of the snapshot read is
+the *latency model*: check-ins are served FIFO by ``workers`` parallel
+deciders with a constant per-request service time, and the whole round's
+check-in-to-decision latencies are computed in closed form:
+
+    dep[i] = max(arr[i], dep[i - k]) + s        (k-server FIFO, fixed s)
+
+which vectorizes into k independent prefix-max chains — O(M) numpy for
+M arrivals, no per-request Python.  A blocking snapshot rebuild earlier
+in the round (the refresher's staleness bound firing) stalls the start
+of service, so blocking rebuilds show up exactly where they hurt a real
+deployment: in the check-in tail latencies.  That is the hook for the
+SLO feedback loop — when a round's p99 exceeds ``slo_p99_s`` the driver
+asks the refresher for an *early background* rebuild, trading snapshot
+freshness work off the critical path to protect the tail.
+
+The front end is deliberately a pure *observer* of server state: it
+consumes no shared RNG, writes nothing to the registry or the snapshot
+store, and only records metrics/history.  That is the equivalence
+argument the differential harness pins — a front-ended async run with
+no load shedding replays the plain async trace bitwise.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import repro.obs as obs
+from repro.server.arrivals import ArrivalSchedule
+from repro.server.snapshot import RegistrySnapshot
+
+LATENCY_HIST = "frontend/checkin_latency_s"
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckinReport:
+    """One round's front-end outcome (all values deterministic)."""
+    round_idx: int
+    checkins: int              # arrivals served this round
+    eligible: int              # decisions answering "selectable now"
+    p50_s: float               # exact modeled latency percentiles
+    p99_s: float
+    p999_s: float
+    makespan_s: float          # last departure - window start
+    sustained_per_s: float     # checkins / makespan (modeled throughput)
+    slo_breached: bool
+
+
+class CheckinFrontend:
+    """Serves one round's arrival schedule from a registry snapshot."""
+
+    def __init__(self, workers: int = 4, service_s: float = 50e-6,
+                 slo_p99_s: float = 0.0, metrics=None):
+        if workers < 1:
+            raise ValueError("frontend needs >= 1 worker")
+        if service_s < 0.0:
+            raise ValueError("service_s must be >= 0")
+        if slo_p99_s < 0.0:
+            raise ValueError("slo_p99_s must be >= 0 (0 = no SLO)")
+        self.workers = int(workers)
+        self.service_s = float(service_s)
+        self.slo_p99_s = float(slo_p99_s)
+        self.metrics = metrics
+        # cumulative counters (serialized at checkpoints so a resumed
+        # run's history["server"]["frontend"] totals match bitwise)
+        self.total_checkins = 0
+        self.slo_breaches = 0
+
+    # ------------------------------------------------------------------
+
+    def _departures(self, arr: np.ndarray, stall_s: float) -> np.ndarray:
+        """Departure time per arrival under k-server FIFO with constant
+        service time; service cannot start before ``stall_s`` (the round's
+        blocking rebuild seconds).  Computed as ``workers`` independent
+        prefix-max chains of ``dep[i] = max(arr[i], dep[i-k]) + s``."""
+        a = np.maximum(arr, stall_s)
+        s, k = self.service_s, self.workers
+        m = a.size
+        if m == 0:
+            return a
+        if s <= 0.0:
+            return a
+        dep = np.empty(m, np.float64)
+        for j in range(min(k, m)):
+            idx = np.arange(j, m, k)
+            pos = np.arange(idx.size, dtype=np.float64)
+            chain = np.maximum.accumulate(a[idx] - pos * s)
+            dep[idx] = chain + (pos + 1.0) * s
+        return dep
+
+    def serve(self, schedule: ArrivalSchedule, snap: RegistrySnapshot,
+              active: np.ndarray, stall_s: float = 0.0) -> CheckinReport:
+        """Answer one round's check-in stream from ``snap``.
+
+        Each decision is the O(1) snapshot gather selection itself
+        performs — cluster id + has-summary eligibility — so the front
+        end answers exactly what the selector would, at the snapshot's
+        (bounded) staleness."""
+        m = len(schedule)
+        rnd = schedule.round_idx
+        if m == 0:
+            return CheckinReport(rnd, 0, 0, 0.0, 0.0, 0.0, 0.0, 0.0, False)
+        # the decision: selectable now == live summary row AND active.
+        # One vectorized gather against frozen arrays — the entire
+        # serving cost is O(M) independent of fleet size N.
+        eligible = (snap.has_mask[schedule.clients]
+                    & np.asarray(active, bool)[schedule.clients])
+        dep = self._departures(schedule.times, float(stall_s))
+        lat = dep - schedule.times
+        p50, p99, p999 = (float(np.quantile(lat, q))
+                          for q in (0.50, 0.99, 0.999))
+        makespan = float(dep[-1] if dep.size else 0.0)
+        sustained = m / makespan if makespan > 0 else 0.0
+        breached = self.slo_p99_s > 0.0 and p99 > self.slo_p99_s
+
+        self.total_checkins += m
+        self.slo_breaches += int(breached)
+        if self.metrics is not None:
+            self.metrics.histogram(LATENCY_HIST).record_many(lat)
+            self.metrics.counter("frontend/checkins").inc(m)
+            self.metrics.counter("frontend/eligible").inc(
+                int(eligible.sum()))
+            self.metrics.gauge("frontend/round_p99_s").set(p99)
+            if breached:
+                self.metrics.counter("frontend/slo_breaches").inc()
+        obs.instant("frontend/round", cat="frontend", round=rnd,
+                    checkins=m, p99_s=p99, snapshot_version=snap.version)
+        return CheckinReport(rnd, m, int(eligible.sum()), p50, p99, p999,
+                             makespan, sustained, breached)
+
+    # ------------------------------------------------------------------
+    # checkpointing
+
+    def state(self) -> dict:
+        return {"total_checkins": int(self.total_checkins),
+                "slo_breaches": int(self.slo_breaches)}
+
+    def load(self, st: dict) -> None:
+        self.total_checkins = int(st["total_checkins"])
+        self.slo_breaches = int(st["slo_breaches"])

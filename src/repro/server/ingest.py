@@ -30,6 +30,13 @@ import numpy as np
 import repro.obs as obs
 
 
+class IngestOverflow(RuntimeError):
+    """A bounded ingest queue was asked to accept more in-flight summaries
+    than ``max_depth``.  The admission controller (``server/admission.py``)
+    is the component that prevents this by shedding load *before* the
+    enqueue; hitting it means a caller bypassed admission control."""
+
+
 @dataclasses.dataclass(frozen=True)
 class SummaryBatch:
     """One round's recomputed summaries, in ingest (registry write) order."""
@@ -44,10 +51,22 @@ class SummaryBatch:
 
 
 class IngestQueue:
-    """FIFO of in-flight summary batches, drained by readiness round."""
+    """FIFO of in-flight summary batches, drained by readiness round.
 
-    def __init__(self):
+    ``max_depth`` bounds the total number of in-flight *summaries* (rows,
+    not batches); 0 means unbounded — the historical behavior, and a
+    latent memory bug at 1M clients, which is why the bounded front end
+    always sets it.  Overflow raises ``IngestOverflow`` loudly instead of
+    silently growing: backpressure decisions belong to the admission
+    controller, not to the queue.
+    """
+
+    def __init__(self, max_depth: int = 0):
+        if max_depth < 0:
+            raise ValueError("max_depth must be >= 0 (0 = unbounded)")
+        self.max_depth = int(max_depth)
         self._pending: list[SummaryBatch] = []
+        self._depth = 0                       # in-flight summaries (rows)
         self.enqueued_batches = 0
         self.drained_batches = 0
         self.requeued_batches = 0
@@ -55,19 +74,44 @@ class IngestQueue:
     def __len__(self) -> int:
         return len(self._pending)
 
+    def depth(self) -> int:
+        """In-flight summaries (rows) across all queued batches."""
+        return self._depth
+
+    def capacity(self) -> int:
+        """Rows that may still be enqueued before overflow (a very large
+        number when unbounded) — the admission controller's budget."""
+        if self.max_depth <= 0:
+            return 1 << 62
+        return max(self.max_depth - self._depth, 0)
+
     def enqueue(self, compute_round: int, delay_rounds: int,
-                summaries: dict, fresh) -> SummaryBatch | None:
+                summaries: dict, fresh,
+                ready_round: int | None = None) -> SummaryBatch | None:
         """Queue one compute round's results; ``fresh`` is indexable by
-        client id (the round's [N, C] cheap-signal array).  Returns the
-        batch, or None when there is nothing to send."""
+        client id (the round's [N, C] cheap-signal array, or a per-id
+        dict for re-admitted deferred summaries).  ``ready_round``
+        overrides the default ``compute_round + delay_rounds`` readiness
+        (deferred batches land relative to their *admission* round, not
+        the round their data was computed).  Returns the batch, or None
+        when there is nothing to send."""
         if not summaries:
             return None
+        if self.max_depth > 0 and self._depth + len(summaries) > \
+                self.max_depth:
+            raise IngestOverflow(
+                f"ingest queue overflow: {self._depth} summaries in "
+                f"flight + {len(summaries)} offered > max_depth="
+                f"{self.max_depth} (admission control should have shed "
+                f"this batch)")
         batch = SummaryBatch(
             compute_round=int(compute_round),
-            ready_round=int(compute_round) + int(delay_rounds),
+            ready_round=(int(compute_round) + int(delay_rounds)
+                         if ready_round is None else int(ready_round)),
             summaries=dict(summaries),
             fresh_rows={c: np.asarray(fresh[c]) for c in summaries})
         self._pending.append(batch)
+        self._depth += len(batch)
         self.enqueued_batches += 1
         obs.instant("ingest/enqueue", cat="ingest", batch=len(batch),
                     compute_round=batch.compute_round,
@@ -83,6 +127,7 @@ class IngestQueue:
         if ready:
             self._pending = [b for b in self._pending
                              if b.ready_round > round_idx]
+            self._depth -= sum(len(b) for b in ready)
             self.drained_batches += len(ready)
             obs.instant("ingest/drain", cat="ingest", round=round_idx,
                         batches=len(ready),
@@ -103,6 +148,7 @@ class IngestQueue:
         redo = dataclasses.replace(batch, ready_round=int(ready_round),
                                    retries=batch.retries + 1)
         self._pending.append(redo)
+        self._depth += len(redo)
         self.requeued_batches += 1
         obs.instant("ingest/requeue", cat="ingest", batch=len(redo),
                     retries=redo.retries, ready_round=redo.ready_round)
@@ -124,6 +170,7 @@ class IngestQueue:
              requeued: int = 0) -> None:
         """Restore a checkpointed queue (batches in FIFO order)."""
         self._pending = list(batches)
+        self._depth = sum(len(b) for b in self._pending)
         self.enqueued_batches = int(enqueued)
         self.drained_batches = int(drained)
         self.requeued_batches = int(requeued)

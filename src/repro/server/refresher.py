@@ -62,7 +62,9 @@ class ClusterRefresher:
         self.policy = policy or StalenessPolicy()
         self._version = store.version
         self._pending_ids: set[int] = set()   # rows changed since last build
+        self._slo_rebuild = False             # front-end SLO breach flag
         self.blocking_builds = 0
+        self.slo_builds = 0
         self.background_builds = 0
         self.background_s = 0.0               # wall seconds spent off-path
         self.skipped_empty = 0                # rebuilds where clustering was
@@ -81,6 +83,15 @@ class ClusterRefresher:
     def note_ingested(self, ids) -> None:
         for c in ids:
             self._pending_ids.add(int(c))
+
+    def request_early_rebuild(self) -> None:
+        """SLO feedback from the check-in front end (DESIGN.md §12): a
+        round whose check-in p99 breached the SLO asks for the *next*
+        refresh decision to rebuild in the background even below the
+        drift-mass trigger — fresher snapshots now, so the age bound
+        never forces a tail-latency-destroying blocking rebuild later.
+        A no-op in ``mode="sync"`` (every round already republishes)."""
+        self._slo_rebuild = True
 
     # ------------------------------------------------------------------
 
@@ -153,16 +164,22 @@ class ClusterRefresher:
                 snap, dt = self._build(rnd, plan, mass, drifted)
                 self.store.publish(snap)
             self.blocking_builds += 1
+            self._slo_rebuild = False      # any rebuild satisfies the ask
             m.counter("server/refresh/blocking").inc()
             m.histogram("server/refresh/blocking_build_s").record(dt)
             return dt, None
-        if mass >= self.policy.drift_mass_trigger:
+        slo_kick = self._slo_rebuild and len(self._pending_ids) > 0
+        if mass >= self.policy.drift_mass_trigger or slo_kick:
             with obs.span("background_rebuild", cat="refresh",
                           lane=obs.LANE_BACKGROUND, round=rnd,
                           age=age, drift_mass=mass):
                 snap, dt = self._build(rnd, plan, mass, drifted)
             self.background_builds += 1
             self.background_s += dt
+            if slo_kick and mass < self.policy.drift_mass_trigger:
+                self.slo_builds += 1
+                m.counter("server/refresh/slo_builds").inc()
+            self._slo_rebuild = False
             m.counter("server/refresh/background").inc()
             m.histogram("server/refresh/background_build_s").record(dt)
             return 0.0, snap

@@ -1,0 +1,33 @@
+"""Deprecation lint: user-facing surfaces build configs through
+``repro.api`` only.  Constructing the flat legacy ``FLConfig`` directly
+is reserved for the library internals and the test suite — an example
+or benchmark doing it would teach the old surface."""
+import pathlib
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _py_files(*dirs):
+    for d in dirs:
+        yield from sorted((REPO / d).rglob("*.py"))
+
+
+def test_examples_and_benchmarks_use_the_api_surface():
+    offenders = [str(p.relative_to(REPO))
+                 for p in _py_files("examples", "benchmarks")
+                 if "FLConfig(" in p.read_text()]
+    assert offenders == [], (
+        f"legacy FLConfig( constructed in {offenders}; build an "
+        "api.RunConfig instead (repro.api is the entry surface)")
+
+
+def test_fl_examples_import_repro_api():
+    # the fl_* examples drive full federated runs, so they should all
+    # show the front door; the low-level kernel demos (quickstart,
+    # serve_batched, ...) drive repro.core directly and are exempt
+    fl_examples = [p for p in _py_files("examples")
+                   if p.name.startswith("fl_")]
+    assert fl_examples, "fl_* examples vanished — lint is vacuous"
+    missing = [str(p.relative_to(REPO)) for p in fl_examples
+               if "repro.api" not in p.read_text()]
+    assert missing == [], f"examples not using repro.api: {missing}"
