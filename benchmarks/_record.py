@@ -15,7 +15,13 @@ instead of letting a stray separator corrupt the record downstream.
 Free-form derived text (no ``=``) is allowed via ``text=`` for records
 nobody dict-parses.
 
-Schema history: **8** adds the ``frontend/*`` check-in front-end records
+Schema history: **9** adds the ``obs/labeled/*`` and ``obs/recorder/*``
+hook-microcost records (dimensional-metric child writes and
+flight-recorder appends, DESIGN.md §13) and the append-only
+``BENCH_history.jsonl`` trajectory (one schema-stamped group-medians
+record per harness run, written by ``run.py`` and summarized by
+``check_regression --trend``); 8 adds the ``frontend/*`` check-in
+front-end records
 (request-level serve latency p50/p99/p999 + sustained check-ins/sec at
 1M clients, and the bounded-queue admission/shed cell, DESIGN.md §12);
 7 adds the ``policies/*`` selection-policy
@@ -30,7 +36,7 @@ durability records; 4 the async ``server/*`` records; 3 ``sharded/*``;
 """
 from __future__ import annotations
 
-SCHEMA_VERSION = 8
+SCHEMA_VERSION = 9
 
 
 def fmt_value(v) -> str:

@@ -27,8 +27,17 @@ asserts:
     counter inc and a histogram record, so a regression in any hook is
     visible as its own record instead of hiding inside a 2% budget.
 
+The gate covers the PR-10 drill-down surfaces too: the enabled A/B arm
+arms the **flight recorder** (``flight_path`` streaming to disk), the
+accounted bound charges flight-record appends and labeled-family
+writes at their measured per-call costs on top of the span events, and
+``obs/labeled/*`` / ``obs/recorder/*`` records expose those costs
+individually (the disabled recorder check must stay at one attribute
+read).
+
 CSV: ``obs/overhead/critical`` (A/B floors + fractions),
-``obs/overhead/accounted`` (the upper bound) and ``obs/hook/*``.
+``obs/overhead/accounted`` (the upper bound), ``obs/hook/*``,
+``obs/labeled/*`` and ``obs/recorder/*``.
 """
 from __future__ import annotations
 
@@ -43,6 +52,8 @@ import repro.obs as obs
 from benchmarks._record import emit
 from benchmarks.bench_server import run_server
 from repro.data.synthetic import FederatedDataset, small_spec
+from repro.obs.metrics import split_labeled
+from repro.obs.recorder import FlightRecorder
 
 OVERHEAD_BUDGET = 0.02     # enabled tracer may add <2% to the critical path
 N_CLIENTS = 100_000        # the paper-scale fleet the claim is about
@@ -56,7 +67,8 @@ def _critical_rounds(out_dir: str | None, rounds: int,
     else:
         with obs.observe(
                 trace_path=os.path.join(out_dir, "trace.json"),
-                metrics_path=os.path.join(out_dir, "metrics.jsonl")):
+                metrics_path=os.path.join(out_dir, "metrics.jsonl"),
+                flight_path=os.path.join(out_dir, "flight.jsonl")):
             r = run_server(N_CLIENTS, "sync", rounds=rounds, seed=seed)
     return np.asarray(r["critical_per_round"])
 
@@ -106,15 +118,34 @@ def run_hooks() -> dict:
             ob.metrics.counter("bench/hook").inc)
         hist = ob.metrics.histogram("bench/hook_s")
         out["histogram_record"] = _percall(lambda: hist.record(1e-3))
+        # labeled-family writes: the hot path is child-cache hit + the
+        # underlying instrument write — a get-or-create per call would
+        # show up here as a regression
+        cfam = ob.metrics.family("bench/labeled", labels=("k",))
+        out["labeled_counter_inc"] = _percall(
+            lambda: cfam.labeled("a").inc())
+        hfam = ob.metrics.family("bench/labeled_s", labels=("k",),
+                                 kind="histogram")
+        out["labeled_histogram_record"] = _percall(
+            lambda: hfam.labeled("a").record(1e-3))
     finally:
         obs.disable()
+    # recorder costs: the disabled check every hook site pays (one
+    # attribute read off the null object) and an in-memory record append
+    out["recorder_disabled"] = _percall(lambda: obs.recorder().enabled)
+    rec = FlightRecorder()
+    out["recorder_record"] = _percall(
+        lambda: rec.record("bench", round=1, n=3, ids=[1, 2, 3]))
     return out
 
 
-def hooks_per_round(seed: int = 0) -> float:
+def hooks_per_round(seed: int = 0) -> dict:
     """Telemetry events per round of a fully-hooked *real* federation
-    run (async server, staleness refresher) — the hook count is a
-    property of the code path, not the fleet size."""
+    run (async server, staleness refresher, bounded-ingest check-in
+    front end, flight recorder armed) — the hook counts are a property
+    of the code path, not the fleet size.  Returns per-round rates for
+    tracer events, flight-record appends and labeled-family writes."""
+    from repro.sim import presets
     data = FederatedDataset(small_spec(num_clients=64, num_classes=5,
                                        side=8, avg_samples=24), seed=seed)
     cfg = api.RunConfig(
@@ -124,10 +155,25 @@ def hooks_per_round(seed: int = 0) -> float:
         clustering=api.ClusteringConfig(kind="online", num_clusters=4),
         server=api.ServerConfig(kind="async", refresh="staleness",
                                 ingest_delay_rounds=1, snapshot_max_age=2,
-                                drift_mass_trigger=0.1))
-    with obs.observe() as ob:
-        api.run(data, cfg)
-    return len(ob.tracer.events) / cfg.rounds
+                                drift_mass_trigger=0.1,
+                                frontend=api.FrontendConfig(
+                                    kind="poisson", slo_p99_s=0.002,
+                                    ingest_max_depth=8)))
+    scen = presets.make_scenario("mobile-churn", 64, seed=seed)
+    with obs.observe(flight=True) as ob:
+        h = api.run(data, cfg, scenario=scen)
+    # labeled writes land in the run's own registry (history metrics);
+    # count value/count/writes per child — an overestimate for bulk incs,
+    # which only strengthens the accounted upper bound
+    labeled = 0.0
+    for name, snap in h["metrics"].items():
+        if split_labeled(name)[1] is None:
+            continue
+        labeled += (snap.get("count") or snap.get("writes")
+                    or abs(snap.get("value") or 0))
+    return {"events": len(ob.tracer.events) / cfg.rounds,
+            "flight": len(ob.flight.records) / cfg.rounds,
+            "labeled": labeled / cfg.rounds}
 
 
 def main(fast: bool = True, seed: int = 0):
@@ -142,33 +188,44 @@ def main(fast: bool = True, seed: int = 0):
          n=N_CLIENTS)
     hooks = run_hooks()
     for name, s in hooks.items():
-        emit(f"obs/hook/{name}", us=s * 1e6)
-    events = hooks_per_round(seed=seed)
-    # worst-case accounting: every event charged at full enabled-span
-    # cost, all of it on the critical path
-    accounted_s = events * hooks["span_enabled"]
+        group = ("obs/labeled" if name.startswith("labeled_")
+                 else "obs/recorder" if name.startswith("recorder_")
+                 else "obs/hook")
+        emit(f"{group}/{name}", us=s * 1e6)
+    rates = hooks_per_round(seed=seed)
+    # worst-case accounting: every tracer event charged at full
+    # enabled-span cost, every flight record at the in-memory append
+    # cost, every labeled write at the child-lookup+inc cost — all of it
+    # on the critical path
+    accounted_s = (rates["events"] * hooks["span_enabled"]
+                   + rates["flight"] * hooks["recorder_record"]
+                   + rates["labeled"] * hooks["labeled_counter_inc"])
     critical_floor = ab["disabled_s"] / ab["rounds"]
     accounted_frac = accounted_s / max(critical_floor, 1e-12)
     emit("obs/overhead/accounted", us=accounted_s * 1e6,
-         events_per_round=f"{events:.1f}",
+         events_per_round=f"{rates['events']:.1f}",
+         flight_per_round=f"{rates['flight']:.1f}",
+         labeled_per_round=f"{rates['labeled']:.1f}",
          accounted_frac=f"{accounted_frac:.5f}",
          budget=f"{OVERHEAD_BUDGET:.2f}")
-    # the acceptance gates: enabled telemetry stays under 2% of the
-    # fleet-scale critical path — deterministically by accounting, and
-    # by wall-clock A/B up to this box's measured noise floor
+    # the acceptance gates: enabled telemetry (spans + labeled metrics +
+    # flight recorder) stays under 2% of the fleet-scale critical path —
+    # deterministically by accounting, and by wall-clock A/B up to this
+    # box's measured noise floor
     assert accounted_frac < OVERHEAD_BUDGET, (
         f"accounted telemetry upper bound {accounted_frac:.2%} exceeds the "
-        f"{OVERHEAD_BUDGET:.0%} budget ({events:.0f} events/round x "
-        f"{hooks['span_enabled'] * 1e6:.2f}us vs "
-        f"{critical_floor * 1e3:.2f}ms critical)")
+        f"{OVERHEAD_BUDGET:.0%} budget ({rates['events']:.0f} events + "
+        f"{rates['flight']:.0f} flight records + {rates['labeled']:.0f} "
+        f"labeled writes per round vs {critical_floor * 1e3:.2f}ms "
+        f"critical)")
     assert ab["overhead_frac"] < OVERHEAD_BUDGET + ab["noise_frac"], (
         f"enabled-tracer A/B overhead {ab['overhead_frac']:.2%} exceeds the "
         f"{OVERHEAD_BUDGET:.0%} budget plus the {ab['noise_frac']:.2%} "
         f"measured noise floor (disabled {ab['disabled_s']:.4f}s, enabled "
         f"{ab['enabled_s']:.4f}s over {ab['rounds']} round floors)")
     return [ab | {"name": "obs/overhead/critical"},
-            {"name": "obs/overhead/accounted", "events_per_round": events,
-             "accounted_frac": accounted_frac},
+            {"name": "obs/overhead/accounted",
+             "accounted_frac": accounted_frac} | rates,
             {"name": "obs/hooks"} | hooks]
 
 

@@ -19,6 +19,13 @@ current run also fails — losing a bench is itself a regression.  Large
 *improvements* are reported as a hint to refresh the baseline
 (regenerate with ``python -m benchmarks.run --json BENCH_baseline.json``
 and commit it alongside the PR that earns it).
+
+``--trend BENCH_history.jsonl`` is the longitudinal view: instead of
+gating one run against one baseline, it prints per-group medians
+across every run ``benchmarks.run`` has appended to the trajectory
+(latest value, median, min/max, run count) — the "how has this group
+moved over the last N runs" answer the single-baseline gate cannot
+give.  Torn last lines (a run killed mid-append) are skipped.
 """
 from __future__ import annotations
 
@@ -72,16 +79,64 @@ def print_offenders(name_current: dict[str, float],
               f"{ratio:6.2f}x{flag}", file=sys.stderr)
 
 
+def read_history(path: str) -> list[dict]:
+    """Parse the append-only trajectory.  A torn *last* line (run killed
+    mid-append) is dropped; torn lines elsewhere are corruption and
+    raise — the same contract as the other JSONL readers."""
+    with open(path) as f:
+        lines = [ln for ln in f.read().splitlines() if ln.strip()]
+    out: list[dict] = []
+    for i, ln in enumerate(lines):
+        try:
+            out.append(json.loads(ln))
+        except json.JSONDecodeError:
+            if i == len(lines) - 1:
+                break
+            raise ValueError(f"{path}: corrupt history record at line "
+                             f"{i + 1}")
+    return out
+
+
+def print_trend(path: str, groups: tuple[str, ...]) -> None:
+    """Per-group medians across every run in the trajectory."""
+    runs = read_history(path)
+    if not runs:
+        print(f"{path}: no runs recorded yet")
+        return
+    print(f"{len(runs)} run(s) in {path} "
+          f"(latest {runs[-1].get('date', '?')})")
+    print(f"{'group':12s} {'runs':>5s} {'latest':>12s} {'median':>12s} "
+          f"{'min':>12s} {'max':>12s}")
+    for g in groups:
+        series = [r["groups"][g] for r in runs
+                  if g in r.get("groups", {})]
+        if not series:
+            continue
+        print(f"{g:12s} {len(series):5d} {series[-1]:10.0f}us "
+              f"{statistics.median(series):10.0f}us "
+              f"{min(series):10.0f}us {max(series):10.0f}us")
+
+
 def main(argv=None) -> None:
     p = argparse.ArgumentParser()
-    p.add_argument("current", help="BENCH JSON of this run")
-    p.add_argument("baseline", help="committed BENCH_baseline.json")
+    p.add_argument("current", nargs="?", help="BENCH JSON of this run")
+    p.add_argument("baseline", nargs="?",
+                   help="committed BENCH_baseline.json")
     p.add_argument("--tolerance", type=float, default=2.5,
                    help="fail when current/baseline exceeds this ratio")
     p.add_argument("--groups", default=",".join(DEFAULT_GROUPS),
                    help="comma-separated record-name groups to gate")
+    p.add_argument("--trend", default=None, metavar="HISTORY",
+                   help="print per-group medians across the runs in this "
+                        "BENCH_history.jsonl and exit (no gating)")
     args = p.parse_args(argv)
     groups = tuple(filter(None, args.groups.split(",")))
+
+    if args.trend is not None:
+        print_trend(args.trend, groups)
+        return
+    if args.current is None or args.baseline is None:
+        p.error("current and baseline are required unless --trend is given")
 
     with open(args.current) as f:
         cur_recs = group_records(json.load(f), groups)

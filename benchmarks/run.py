@@ -28,6 +28,13 @@ and mirrors every CSV record into a machine-readable ``BENCH.json``
 trajectory is tracked across PRs — and gated against the committed
 ``BENCH_baseline.json`` by ``benchmarks.check_regression`` in CI.
 
+Each run also **appends** one schema-stamped group-medians record to
+``BENCH_history.jsonl`` (``--history PATH`` / ``--no-history``) — an
+append-only trajectory across runs, summarized by
+``check_regression --trend BENCH_history.jsonl``.  BENCH.json answers
+"is this run slower than the committed baseline"; the history answers
+"how has each group moved across the last N runs".
+
 Default sizes are CPU-budget-friendly; --full uses paper-scale settings.
 """
 from __future__ import annotations
@@ -125,6 +132,10 @@ def main(argv=None) -> None:
                    help="machine-readable output path")
     p.add_argument("--no-json", action="store_true",
                    help="skip writing the JSON mirror")
+    p.add_argument("--history", default="BENCH_history.jsonl",
+                   help="append-only per-run group-medians trajectory")
+    p.add_argument("--no-history", action="store_true",
+                   help="skip appending the trajectory record")
     args = p.parse_args(argv)
     only = set(filter(None, args.only.split(",")))
     valid = {name for name, _ in BENCHES}
@@ -176,6 +187,20 @@ def main(argv=None) -> None:
         with open(args.json, "w") as f:
             json.dump(report, f, indent=1)
         print(f"# wrote {args.json}", flush=True)
+    if not args.no_history:
+        # append-only: one group-medians record per harness run, so the
+        # per-group trajectory survives across baseline refreshes
+        from benchmarks.check_regression import DEFAULT_GROUPS, group_medians
+        rec = {"schema": SCHEMA_VERSION,
+               "date": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+               "full": bool(args.full), "seed": int(args.seed),
+               "only": sorted(only) if only else None,
+               "groups": {g: round(m, 2) for g, m in
+                          group_medians(report, DEFAULT_GROUPS).items()},
+               "failures": failures}
+        with open(args.history, "a") as f:
+            f.write(json.dumps(rec, separators=(",", ":")) + "\n")
+        print(f"# appended {args.history}", flush=True)
     if failures:
         print(f"# FAILED: {','.join(failures)}", file=sys.stderr)
         sys.exit(1)

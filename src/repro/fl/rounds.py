@@ -305,6 +305,7 @@ class RoundContext:
         self.policy = make_policy(cfg.selection)
         self.client_stats = ClientStats(spec.num_clients)
         self._select_s = 0.0
+        self._flight_sel = None
 
         test_x, test_y = data.test_set()
         test_x, test_y = jnp.asarray(test_x), jnp.asarray(test_y)
@@ -560,6 +561,11 @@ class RoundContext:
             speeds=plan.speeds, available=plan.available, rng=self.rng,
             active=plan.active, label_dists=fresh,
             data_sizes=self.data.sizes, stats=self.client_stats)
+        rec = obs.recorder()
+        if rec.enabled:
+            # arm the policy's score-component scratchpad; write-only
+            # for the policy, so decisions are identical recorder on/off
+            pctx.explain = {}
         with obs.span("select_devices", round=rnd,
                       policy=self.policy.name) as sp:
             t0 = time.perf_counter()
@@ -567,6 +573,27 @@ class RoundContext:
             self._select_s = time.perf_counter() - t0
             sp.annotate(n_selected=int(np.asarray(selected).size))
         selected = np.asarray(selected, np.int64)
+        # per-cluster quota fill — the drill-down answer to "which
+        # cluster is starved".  Counters accumulate across rounds in the
+        # per-run registry (history["metrics"]), one stream per cluster.
+        fill = None
+        if self.uses_summaries and num_clusters:
+            asg_sel = np.asarray(sel_assignment, np.int64)[selected]
+            fill = np.bincount(asg_sel[asg_sel >= 0],
+                               minlength=num_clusters)
+            fam = self.metrics.family("select/cluster_fill",
+                                      labels=("cluster",))
+            for c, n_sel in enumerate(fill.tolist()):
+                if n_sel:
+                    fam.labeled(c).inc(n_sel)
+        if rec.enabled:
+            self._flight_sel = {
+                "sel_assignment": np.asarray(sel_assignment, np.int64),
+                "available": plan.available, "explain": pctx.explain,
+                "num_clusters": int(num_clusters),
+                "fill": fill.tolist() if fill is not None else None}
+        else:
+            self._flight_sel = None
         self.scenario.note_selected(selected)
         self.client_stats.note_selected(selected, rnd)
         return selected
@@ -678,6 +705,38 @@ class RoundContext:
         obs.counter_sample("snapshot_age", snapshot_age)
         obs.counter_sample("accuracy", self._acc)
 
+        rec = obs.recorder()
+        if rec.enabled:
+            # the per-round decision record: everything explain.why()
+            # needs to reconstruct this round's selection, byte-exact.
+            # No wall-clock values — only modeled/decision state — so
+            # the record stream is deterministic per seed.
+            from repro.obs.recorder import (
+                pack_bool, pack_floats, pack_ints,
+            )
+            fs = self._flight_sel or {}
+            sel_asg = fs.get("sel_assignment")
+            rec.record(
+                "round", round=rnd, policy=self.policy.name,
+                per_round=cfg.clients_per_round,
+                selected=sel.tolist(),
+                completed=sel[completed].tolist(),
+                dropped=int(sel.size - completed.sum()),
+                n_active=int(plan.active.sum()),
+                n_available=int(plan.available.sum()),
+                acc=self._acc, sim_time=self.sim_time,
+                snapshot_version=int(snapshot_version),
+                snapshot_age=int(snapshot_age),
+                num_clusters=fs.get("num_clusters", self.num_clusters),
+                cluster_fill=fs.get("fill"),
+                active=pack_bool(plan.active),
+                available=pack_bool(plan.available),
+                speeds=pack_floats(plan.speeds),
+                assignment=(pack_ints(sel_asg)
+                            if sel_asg is not None else None),
+                explain=fs.get("explain"))
+            self._flight_sel = None
+
     def round_overhead_s(self) -> float:
         """This round's server-side wall seconds so far (scan + cluster +
         ingest scatter) — the sync server's critical-path charge."""
@@ -739,6 +798,11 @@ def _drive_sync(ctx: RoundContext, session=None, faults=None,
             if ctx.sync_recluster_due(rnd, plan, stale):
                 ctx.recluster_now(rnd, plan.active,
                                   ctx.sync_drifted(plan, stale))
+                rec = obs.recorder()
+                if rec.enabled:
+                    rec.record("refresh", round=rnd, kind="sync",
+                               n_stale=len(stale),
+                               version=ctx.recluster_count)
         step(rnd, Stage.REFRESH, refresh)
         sel = step(rnd, Stage.SELECT, lambda: ctx.select(rnd, plan, fresh))
         step(rnd, Stage.TRAIN,

@@ -44,18 +44,28 @@ from repro.obs.trace import (  # noqa: F401
     Span,
     Tracer,
 )
+from repro.obs.recorder import (  # noqa: F401
+    FlightRecorder,
+    NULL_RECORDER,
+    NullFlightRecorder,
+)
 from repro.obs import export  # noqa: F401
 
 
 class Observer:
-    """A tracer + metric registry pair; ``enabled`` reflects the tracer."""
+    """A tracer + metric registry + flight recorder triple; ``enabled``
+    reflects the tracer.  The recorder stays the null object unless the
+    observer was enabled with flight recording (``observe(flight_path=
+    ...)`` / ``observe(report_path=...)`` / ``enable(flight=True)``) —
+    provenance records are opt-in on top of tracing."""
 
-    __slots__ = ("tracer", "metrics", "kernel_profile")
+    __slots__ = ("tracer", "metrics", "flight", "kernel_profile")
 
-    def __init__(self, tracer=None, metrics=None,
+    def __init__(self, tracer=None, metrics=None, flight=None,
                  kernel_profile: bool = False):
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self.metrics = metrics if metrics is not None else NULL_REGISTRY
+        self.flight = flight if flight is not None else NULL_RECORDER
         self.kernel_profile = bool(kernel_profile)
 
     @property
@@ -72,10 +82,20 @@ def current() -> Observer:
     return _current
 
 
-def enable(kernel_profile: bool = False) -> Observer:
-    """Install (and return) a fresh live observer."""
+def enable(kernel_profile: bool = False, flight: bool = False,
+           flight_path: str | None = None) -> Observer:
+    """Install (and return) a fresh live observer.  ``flight=True`` (or
+    a ``flight_path``) arms the selection-provenance flight recorder;
+    with a path, records stream to it as JSONL."""
     global _current
-    _current = Observer(Tracer(), MetricRegistry(),
+    rec = None
+    if flight or flight_path is not None:
+        if flight_path is not None:
+            import os
+            os.makedirs(os.path.dirname(flight_path) or ".",
+                        exist_ok=True)
+        rec = FlightRecorder(flight_path)
+    _current = Observer(Tracer(), MetricRegistry(), flight=rec,
                         kernel_profile=kernel_profile)
     return _current
 
@@ -91,19 +111,30 @@ def disable() -> Observer:
 
 @contextlib.contextmanager
 def observe(trace_path: str | None = None, metrics_path: str | None = None,
-            kernel_profile: bool = False):
+            kernel_profile: bool = False, flight_path: str | None = None,
+            report_path: str | None = None, flight: bool = False):
     """Scoped observability: enable on entry; on exit restore the
     disabled default and write the requested artifacts (Chrome trace
-    JSON for Perfetto, metrics JSONL)."""
-    ob = enable(kernel_profile=kernel_profile)
+    JSON for Perfetto, metrics JSONL, flight-record JSONL, and the
+    self-contained HTML fleet dashboard).  ``flight_path`` or
+    ``report_path`` (which needs the records) arms the flight
+    recorder."""
+    ob = enable(kernel_profile=kernel_profile,
+                flight=flight or report_path is not None,
+                flight_path=flight_path)
     try:
         yield ob
     finally:
         disable()
+        ob.flight.close()
         if trace_path is not None:
             export.write_trace(ob.tracer, trace_path)
         if metrics_path is not None:
             export.write_metrics_jsonl(ob.metrics, metrics_path)
+        if report_path is not None:
+            from repro.obs import report
+            report.write_report(report_path, metrics=ob.metrics,
+                                flight=list(ob.flight.records))
 
 
 # ---------------------------------------------------------------------------
@@ -128,6 +159,13 @@ def counter_sample(name: str, value: float) -> None:
 def metrics() -> MetricRegistry:
     """The current metric registry (the no-op null one when disabled)."""
     return _current.metrics
+
+
+def recorder():
+    """The current flight recorder (the no-op null one unless the
+    observer was armed with flight recording).  Hook sites check
+    ``recorder().enabled`` before building any record fields."""
+    return _current.flight
 
 
 def enabled() -> bool:

@@ -1,0 +1,265 @@
+"""Selection-provenance queries over the flight record (DESIGN.md §13).
+
+``why(client, round)`` answers the operator question the whole-process
+metrics cannot: *why was this client selected / not selected / shed this
+round?* — reconstructed entirely from the flight record, after the run,
+with no re-execution.
+
+The reconstruction is **deterministic and exact** by construction:
+
+  * the round record packs the same arrays the policy read (candidate
+    masks, the selection-time cluster assignment, float64 speeds) plus
+    the policy's own score components (``PolicyContext.explain``);
+  * every ranking a policy performs goes through ``rank_desc`` — a
+    stable sort with ties broken by client id — so re-running the same
+    sort over the recorded inputs reproduces the exact order the policy
+    saw;
+  * ``reconstruct_selection`` replays the quota/rank logic over the
+    record and must reproduce the recorded ``selected`` list byte for
+    byte — the 24-seed harness pins this against live traces, which is
+    what makes ``why``'s rank/quota attribution trustworthy rather than
+    merely plausible.
+
+Resumed runs append re-executed rounds to the same flight file; the
+``Flight`` view dedups per ``(type, round)`` keeping the **last**
+record, matching the round loop's own commit semantics (a re-executed
+round supersedes its interrupted first attempt).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.obs.recorder import (
+    read_flight, unpack_bool, unpack_floats, unpack_ints,
+)
+
+
+def rank_desc(values) -> np.ndarray:
+    # mirror of policies.base.rank_desc (kept local: obs must not import
+    # the policy layer — the recorder is readable without it)
+    return np.argsort(-np.asarray(values), kind="stable")
+
+
+class Flight:
+    """Indexed view over a flight-record stream."""
+
+    def __init__(self, records):
+        self._by_round: dict[tuple, dict] = {}
+        self._all: list[dict] = []
+        self.schema = None
+        for rec in records:
+            if rec.get("type") == "header":
+                self.schema = rec.get("schema")
+                continue
+            self._all.append(rec)
+            rnd = rec.get("round")
+            if rnd is not None:
+                # last record wins: a resumed run re-executes its
+                # crashed round and re-appends — same semantics as the
+                # round loop's commit boundary
+                self._by_round[(rec["type"], int(rnd))] = rec
+
+    @classmethod
+    def from_path(cls, path: str) -> "Flight":
+        return cls(read_flight(path))
+
+    def rounds(self) -> list[int]:
+        return sorted({r for (t, r) in self._by_round if t == "round"})
+
+    def get(self, type_: str, rnd: int) -> dict | None:
+        return self._by_round.get((type_, int(rnd)))
+
+    def round_record(self, rnd: int) -> dict:
+        rec = self.get("round", rnd)
+        if rec is None:
+            raise KeyError(f"no round record for round {rnd} "
+                           f"(have {self.rounds()})")
+        return rec
+
+
+# ---------------------------------------------------------------------------
+# selection reconstruction (the pinning half)
+
+
+def reconstruct_selection(rec: dict) -> list[int]:
+    """Replay the recorded round's selection from the record alone.
+
+    Supported policies reproduce the recorded ``selected`` list exactly
+    (stable sorts over byte-exact recorded inputs); unsupported ones
+    raise ``NotImplementedError`` — silently returning a guess would
+    poison the pinning claim.
+    """
+    policy = rec.get("policy")
+    if not rec["selected"]:
+        return []              # empty pool: nothing to rank, any policy
+    ok = unpack_bool(rec["active"]) & unpack_bool(rec["available"])
+    per_round = int(rec["per_round"])
+    explain = rec.get("explain") or {}
+    if policy in ("haccs", "haccs-legacy"):
+        asg = unpack_ints(rec["assignment"])
+        speeds = unpack_floats(rec["speeds"])
+        quotas = explain.get("quotas")
+        if quotas is None:
+            raise NotImplementedError(
+                "round record carries no quota components")
+        chosen: list[int] = []
+        for c in range(int(rec["num_clusters"])):
+            members = np.flatnonzero((asg == c) & ok)
+            if members.size == 0 or quotas[c] == 0:
+                continue
+            order = members[rank_desc(speeds[members])]
+            chosen.extend(int(i) for i in order[:quotas[c]])
+        if len(chosen) < per_round:
+            rest = np.setdiff1d(np.flatnonzero(ok),
+                                np.asarray(chosen, np.int64))
+            extra = rest[rank_desc(speeds[rest])]
+            chosen.extend(int(i) for i in extra[:per_round - len(chosen)])
+        return chosen[:per_round]
+    if policy == "oort" and ("utility" in explain
+                             or "explored" in explain):
+        # explore picks are recorded verbatim (they are a seeded draw,
+        # not a ranking); the exploit tail is the top-k utility replay
+        explored = [int(c) for c in explain.get("explored", [])]
+        n_exploit = len(rec["selected"]) - len(explored)
+        if n_exploit == 0:
+            return explored
+        util = {int(c): float(v) for c, v in explain["utility"].items()}
+        known = np.asarray(sorted(util), np.int64)
+        order = known[rank_desc([util[int(c)] for c in known])]
+        return explored + [int(c) for c in order[:n_exploit]]
+    raise NotImplementedError(
+        f"no reconstruction for policy {policy!r}")
+
+
+# ---------------------------------------------------------------------------
+# the drill-down query
+
+
+def why(client: int, rnd: int, flight: Flight) -> dict:
+    """Full provenance for one ``(client, round)``: candidate facts,
+    the selection outcome with its rank/quota attribution, plus the
+    round's admission, refresh and check-in context."""
+    rec = flight.round_record(rnd)
+    client = int(client)
+    active = unpack_bool(rec["active"])
+    available = unpack_bool(rec["available"])
+    speeds = unpack_floats(rec["speeds"])
+    if not (0 <= client < active.size):
+        raise IndexError(f"client {client} outside fleet of {active.size}")
+    selected = [int(c) for c in rec["selected"]]
+    completed = [int(c) for c in rec["completed"]]
+    explain = rec.get("explain") or {}
+    asg = (unpack_ints(rec["assignment"])
+           if rec.get("assignment") is not None else None)
+    cluster = int(asg[client]) if asg is not None else None
+    quotas = explain.get("quotas")
+    fill = rec.get("cluster_fill")
+
+    out: dict = {
+        "client": client, "round": int(rnd),
+        "policy": rec.get("policy"),
+        "active": bool(active[client]),
+        "available": bool(available[client]),
+        "speed": float(speeds[client]),
+        "cluster": cluster,
+        "quota": (int(quotas[cluster])
+                  if quotas is not None and cluster is not None
+                  and cluster >= 0 else None),
+        "cluster_fill": (int(fill[cluster])
+                         if fill is not None and cluster is not None
+                         and cluster >= 0 else None),
+        "selected": client in selected,
+        "completed": client in completed,
+        "snapshot": {"version": rec.get("snapshot_version"),
+                     "age": rec.get("snapshot_age")},
+    }
+
+    # rank within the client's own cluster, by the exact ordering the
+    # quota pass used (speed desc, ties by id) — only meaningful for the
+    # clustered policies, None otherwise
+    rank = None
+    if (cluster is not None and cluster >= 0
+            and rec.get("policy") in ("haccs", "haccs-legacy")):
+        ok = active & available
+        members = np.flatnonzero((asg == cluster) & ok)
+        if members.size and bool(ok[client]):
+            order = members[rank_desc(speeds[members])]
+            rank = int(np.flatnonzero(order == client)[0])
+    out["cluster_rank"] = rank
+    if "utility" in explain:
+        out["utility"] = explain["utility"].get(str(client))
+
+    # outcome attribution, most-specific first
+    if client in selected:
+        out["outcome"] = ("selected-backfill"
+                          if client in explain.get("backfilled", [])
+                          else ("selected-explore"
+                                if client in explain.get("explored", [])
+                                else "selected"))
+        out["selection_index"] = selected.index(client)
+    elif not out["active"]:
+        out["outcome"] = "inactive"
+    elif not out["available"]:
+        out["outcome"] = "unavailable"
+    elif asg is not None and cluster == -1:
+        # outside the quota pool: no live summary row at selection time
+        # (never summarized, row still in flight, or churned since the
+        # snapshot) — only the starvation backfill could have picked it
+        out["outcome"] = "unclustered"
+    elif rank is not None and out["quota"] is not None:
+        out["outcome"] = ("outranked" if rank >= out["quota"]
+                          else "not-selected")
+    else:
+        out["outcome"] = "not-selected"
+
+    # round context: admission (was this client's summary shed?),
+    # refresh decisions, check-in service quality
+    adm = flight.get("admission", rnd)
+    if adm is not None:
+        shed = client in adm.get("shed", [])
+        out["admission"] = {
+            "shed": shed,
+            "lane": ("priority" if client in adm.get("shed_priority", [])
+                     else "normal") if shed else None,
+            "retry_round": (int(rnd) + int(adm.get("retry_after", 1))
+                            if shed else None),
+            "queue_depth": adm.get("queue_depth"),
+        }
+    refresh = flight.get("refresh", rnd)
+    if refresh is not None:
+        out["refresh"] = {k: refresh[k] for k in
+                          ("kind", "age", "drift_mass", "version")
+                          if k in refresh}
+    checkin = flight.get("checkin", rnd)
+    if checkin is not None:
+        out["checkin"] = {k: checkin[k] for k in
+                          ("checkins", "eligible", "p99_s", "breached")
+                          if k in checkin}
+    return out
+
+
+def format_why(w: dict) -> str:
+    """One human-readable paragraph per query (the CLI-ish view)."""
+    lines = [f"client {w['client']} @ round {w['round']} "
+             f"[{w['policy']}]: {w['outcome']}"]
+    facts = (f"  active={w['active']} available={w['available']} "
+             f"speed={w['speed']:.3g}")
+    if w.get("cluster") is not None:
+        facts += f" cluster={w['cluster']}"
+    if w.get("cluster_rank") is not None:
+        facts += f" rank={w['cluster_rank']}"
+    if w.get("quota") is not None:
+        facts += f" quota={w['quota']} fill={w['cluster_fill']}"
+    lines.append(facts)
+    snap = w.get("snapshot") or {}
+    lines.append(f"  snapshot v{snap.get('version')} "
+                 f"age={snap.get('age')}")
+    adm = w.get("admission")
+    if adm and adm.get("shed"):
+        lines.append(f"  summary SHED ({adm['lane']} lane), retries "
+                     f"round {adm['retry_round']}")
+    ref = w.get("refresh")
+    if ref:
+        lines.append(f"  refresh: {ref.get('kind')} -> v"
+                     f"{ref.get('version')}")
+    return "\n".join(lines)

@@ -27,11 +27,20 @@ import os
 
 def metrics_records(registry) -> list[dict]:
     """``{"name": ..., "kind": ..., ...}`` record per metric, sorted by
-    name (JSONL line order is deterministic)."""
+    name (JSONL line order is deterministic).  Children of labeled
+    families additionally carry ``family`` (the base name) and
+    ``labels`` (``{key: value}``) so downstream consumers — the fleet
+    dashboard, jq — can group by dimension without re-parsing names."""
+    from repro.obs.metrics import split_labeled
+
     out = []
     for name, snap in registry.snapshot().items():
         rec = {"name": name}
         rec.update(snap)
+        base, labels = split_labeled(name)
+        if labels is not None:
+            rec["family"] = base
+            rec["labels"] = labels
         out.append(rec)
     return out
 
@@ -49,29 +58,54 @@ def _json_sane(obj):
     return obj
 
 
-def write_metrics_jsonl(registry, path: str) -> int:
-    """One metric per line; returns the number of records written."""
-    records = metrics_records(registry)
+def _atomic_write(path: str, body: str) -> None:
+    """tmp + fsync + ``os.replace`` (the checkpoint idiom): a crash
+    mid-write leaves either the old artifact or the new one, never a
+    torn file."""
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    with open(path, "w") as f:
-        for rec in records:
-            f.write(json.dumps(_json_sane(rec), separators=(",", ":"),
-                               allow_nan=False) + "\n")
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        f.write(body)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def write_metrics_jsonl(registry, path: str) -> int:
+    """One metric per line (atomic); returns the number of records
+    written."""
+    records = metrics_records(registry)
+    _atomic_write(path, "".join(
+        json.dumps(_json_sane(rec), separators=(",", ":"),
+                   allow_nan=False) + "\n" for rec in records))
     return len(records)
 
 
 def read_metrics_jsonl(path: str) -> list[dict]:
+    """Parse a metrics JSONL artifact.  A torn *last* line is dropped
+    (same contract as the durable event log — an interrupted append
+    never poisons the artifact); a bad line anywhere else raises."""
     with open(path) as f:
-        return [json.loads(line) for line in f if line.strip()]
+        lines = [ln for ln in f.read().splitlines() if ln.strip()]
+    out: list[dict] = []
+    for i, ln in enumerate(lines):
+        try:
+            out.append(json.loads(ln))
+        except json.JSONDecodeError:
+            if i == len(lines) - 1:
+                break
+            raise ValueError(f"{path}: corrupt metrics record at line "
+                             f"{i + 1}")
+    return out
 
 
 def write_trace(tracer, path: str) -> int:
-    """Write the Perfetto-loadable trace; returns the event count."""
+    """Write the Perfetto-loadable trace (atomic); returns the event
+    count."""
     trace = tracer.chrome_trace()
-    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    with open(path, "w") as f:
-        json.dump(_json_sane(trace), f, separators=(",", ":"),
-                  allow_nan=False)
+    _atomic_write(path, json.dumps(_json_sane(trace),
+                                   separators=(",", ":"),
+                                   allow_nan=False))
     return len(trace["traceEvents"])
 
 

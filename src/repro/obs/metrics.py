@@ -23,6 +23,17 @@ their samples, exactly), gauges take the donor's latest value and the
 max of the two maxima.  That is what lets per-shard / per-run registries
 combine into one fleet view (``MetricRegistry.merge``).
 
+**Dimensional metrics** ride on the same algebra: a ``Family`` is a set
+of same-kind instruments keyed by a fixed tuple of label names
+(``registry.family("select/fill", labels=("cluster",))``), each child
+stored in the registry under the canonical name
+``base{label=value,...}`` (labels in declared order).  Because children
+are ordinary instruments, ``merge`` needs no new math — merging two
+registries merges each labeled stream independently, so a labeled
+family merged across shards equals the family recorded on the union of
+their streams.  Family *metadata* is checked on merge: the same family
+name with different label keys or kinds is a bug and raises.
+
 The null registry (``NULL_REGISTRY``) hands out one shared no-op
 instrument: code can unconditionally write metrics through
 ``repro.obs.metrics()`` and pay one attribute call when observability is
@@ -230,22 +241,111 @@ class Histogram:
         return out
 
 
+_KINDS = {"counter": Counter, "gauge": Gauge, "histogram": Histogram}
+
+
+def labeled_name(base: str, labels: tuple, values: tuple) -> str:
+    """Canonical child name ``base{k=v,...}`` — labels in declared
+    order, so the same label values always map to the same metric."""
+    inner = ",".join(f"{k}={v}" for k, v in zip(labels, values))
+    return f"{base}{{{inner}}}"
+
+
+def split_labeled(name: str):
+    """Inverse of ``labeled_name``: ``(base, {label: value})`` for a
+    family child, ``(name, None)`` for a plain metric name."""
+    if not name.endswith("}"):
+        return name, None
+    i = name.find("{")
+    if i < 0:
+        return name, None
+    pairs = {}
+    inner = name[i + 1:-1]
+    if inner:
+        for part in inner.split(","):
+            k, _, v = part.partition("=")
+            pairs[k] = v
+    return name[:i], pairs
+
+
+class Family:
+    """A labeled instrument family: same-kind children keyed by a fixed
+    tuple of label names, get-or-created on first write.
+
+    ``labeled(*values)`` (positional, in declared label order) returns
+    the child instrument; children live in the owning registry under
+    ``labeled_name`` so the existing merge algebra applies unchanged.
+    """
+
+    __slots__ = ("name", "labels", "kind", "_registry", "_cls", "_args",
+                 "_children")
+
+    def __init__(self, registry, name: str, labels: tuple, kind: str,
+                 args: tuple = ()):
+        cls = _KINDS.get(kind)
+        if cls is None:
+            raise ValueError(f"family {name!r}: unknown kind {kind!r}")
+        if not labels:
+            raise ValueError(f"family {name!r}: needs at least one label")
+        bad = [c for c in "{}=," if c in name]
+        if bad:
+            raise ValueError(f"family name {name!r} contains reserved "
+                             f"{bad!r}")
+        self.name = name
+        self.labels = tuple(str(k) for k in labels)
+        self.kind = kind
+        self._registry = registry
+        self._cls = cls
+        self._args = args
+        self._children: dict[tuple, object] = {}
+
+    def labeled(self, *values):
+        key = values if len(values) == len(self.labels) else None
+        if key is None:
+            raise ValueError(
+                f"family {self.name!r} takes labels {self.labels}, got "
+                f"{len(values)} value(s)")
+        child = self._children.get(key)
+        if child is None:
+            vals = tuple(str(v) for v in values)
+            for v in vals:
+                if any(c in v for c in "{}=,"):
+                    raise ValueError(f"label value {v!r} contains a "
+                                     f"reserved character")
+            child = self._registry._get(
+                labeled_name(self.name, self.labels, vals),
+                self._cls, *self._args)
+            self._children[key] = child
+        return child
+
+    def children(self) -> dict:
+        """``{(value, ...): instrument}`` — every child created so far
+        through *this* family handle."""
+        return dict(self._children)
+
+
 class MetricRegistry:
     """Process-local named-instrument store.
 
     ``counter``/``gauge``/``histogram`` get-or-create by name; asking
     for an existing name with a different kind fails loudly (two call
     sites disagreeing about an instrument is a bug, not a merge).
+    ``family`` get-or-creates a labeled family; the same name with
+    different label keys or a different kind raises.
     """
 
     enabled = True
 
     def __init__(self):
         self._metrics: dict[str, object] = {}
+        self._families: dict[str, Family] = {}
 
     def _get(self, name: str, cls, *args, **kw):
         m = self._metrics.get(name)
         if m is None:
+            if name in self._families:
+                raise TypeError(f"metric {name!r} already exists as a "
+                                f"labeled family")
             m = self._metrics[name] = cls(name, *args, **kw)
         elif not isinstance(m, cls):
             raise TypeError(f"metric {name!r} is a {m.kind}, not a "
@@ -262,16 +362,66 @@ class MetricRegistry:
                   per_decade: int = 64) -> Histogram:
         return self._get(name, Histogram, lo, hi, per_decade)
 
+    def family(self, name: str, labels: tuple, kind: str = "counter",
+               **layout) -> Family:
+        """Get-or-create the labeled family ``name`` with the given
+        label keys.  ``kind`` is ``"counter"``/``"gauge"``/
+        ``"histogram"``; ``layout`` (``lo``/``hi``/``per_decade``) is
+        forwarded to histogram children."""
+        if any(c in name for c in "{}=,"):
+            raise ValueError(f"family name {name!r} contains a reserved "
+                             f"character ({{}}=,)")
+        fam = self._families.get(name)
+        if fam is not None:
+            if tuple(str(k) for k in labels) != fam.labels:
+                raise ValueError(
+                    f"family {name!r} has labels {fam.labels}, not "
+                    f"{tuple(labels)}")
+            if kind != fam.kind:
+                raise TypeError(f"family {name!r} is a {fam.kind} "
+                                f"family, not {kind}")
+            return fam
+        if name in self._metrics:
+            raise TypeError(f"metric {name!r} already exists as a plain "
+                            f"{self._metrics[name].kind}")
+        args = ()
+        if kind == "histogram":
+            args = (layout.get("lo", 1e-7), layout.get("hi", 1e3),
+                    layout.get("per_decade", 64))
+        fam = Family(self, name, tuple(labels), kind, args)
+        self._families[name] = fam
+        return fam
+
     def get(self, name: str):
         return self._metrics.get(name)
 
     def names(self) -> list[str]:
         return sorted(self._metrics)
 
+    def families(self) -> dict[str, Family]:
+        return dict(self._families)
+
     def merge(self, other: "MetricRegistry") -> None:
         """Fold another registry in (shard/run roll-up): same-name
         instruments merge by their own algebra, new names are adopted
-        (by reference — donors are normally discarded after a merge)."""
+        (by reference — donors are normally discarded after a merge).
+        Family metadata merges first, so a labeled family recorded on
+        two shards rolls up into one family whose per-label streams are
+        each the union of the shards' streams; the same family name with
+        different label keys (or kind) raises."""
+        for name, fam in other._families.items():
+            mine = self._families.get(name)
+            if mine is None:
+                self._families[name] = Family(self, name, fam.labels,
+                                              fam.kind, fam._args)
+            elif mine.labels != fam.labels:
+                raise ValueError(
+                    f"family {name!r}: cannot merge labels {fam.labels} "
+                    f"into {mine.labels}")
+            elif mine.kind != fam.kind:
+                raise TypeError(
+                    f"family {name!r}: cannot merge {fam.kind} family "
+                    f"into {mine.kind}")
         for name in other.names():
             theirs = other._metrics[name]
             ours = self._metrics.get(name)
@@ -327,6 +477,26 @@ class _NullInstrument:
 _NULL_INSTRUMENT = _NullInstrument()
 
 
+class _NullFamily:
+    """The shared do-nothing family the null registry hands out:
+    ``labeled(...)`` is one dict-free call returning the shared no-op
+    instrument."""
+
+    __slots__ = ()
+    name = "<null>"
+    labels = ()
+    kind = "null"
+
+    def labeled(self, *values):
+        return _NULL_INSTRUMENT
+
+    def children(self) -> dict:
+        return {}
+
+
+_NULL_FAMILY = _NullFamily()
+
+
 class NullMetricRegistry(MetricRegistry):
     """Disabled registry: every instrument is the shared no-op, nothing
     is stored — the cost of a metric write is one method call."""
@@ -342,6 +512,10 @@ class NullMetricRegistry(MetricRegistry):
     def histogram(self, name: str, lo: float = 1e-7, hi: float = 1e3,
                   per_decade: int = 64):
         return _NULL_INSTRUMENT
+
+    def family(self, name: str, labels: tuple, kind: str = "counter",
+               **layout):
+        return _NULL_FAMILY
 
     def merge(self, other) -> None:
         pass

@@ -1,0 +1,168 @@
+"""Selection-provenance flight recorder (DESIGN.md §13).
+
+An append-only structured log of per-round *decisions*: which clients
+were selected / shed / deferred and why — policy score components,
+snapshot version and age, refresh triggers, admission queue state.
+Records carry **no wall-clock timestamps**, only round indices and
+modeled/deterministic values, so the record stream for a given seed is
+bitwise identical run-to-run (and identical with the recorder on vs
+off as far as the run's own history is concerned — recording is
+read-only with respect to the round loop's state).
+
+Records are JSON objects, streamed one-per-line to ``flight_path`` as
+they happen (append + flush, so a crash loses at most the line being
+written — ``read_flight`` tolerates a torn tail exactly like the
+durable event log).  Dense per-client arrays (availability masks,
+assignments, speeds) are packed: boolean masks as base64 bitmaps
+(``pack_bool``), integer/float arrays as base64 of their little-endian
+bytes — byte-exact round trips, so ``obs/explain.py`` can reconstruct a
+selection decision *exactly* from the record alone.
+
+The null recorder (``NULL_RECORDER``) keeps the disabled cost at one
+attribute read: every hook is ``if rec.enabled:`` before any record
+dict is built.
+"""
+from __future__ import annotations
+
+import base64
+import json
+
+import numpy as np
+
+SCHEMA = 1
+
+
+# ---------------------------------------------------------------------------
+# packed array codecs — byte-exact round trips
+
+
+def pack_bool(mask) -> dict:
+    """Boolean mask -> ``{"bits": b64(packbits), "n": len}``."""
+    m = np.asarray(mask, bool).ravel()
+    return {"bits": base64.b64encode(np.packbits(m).tobytes()).decode(),
+            "n": int(m.size)}
+
+
+def unpack_bool(obj) -> np.ndarray:
+    raw = np.frombuffer(base64.b64decode(obj["bits"]), np.uint8)
+    return np.unpackbits(raw, count=obj["n"]).astype(bool)
+
+
+def pack_ints(a) -> dict:
+    v = np.ascontiguousarray(np.asarray(a, np.int64).ravel())
+    return {"i64": base64.b64encode(v.astype("<i8").tobytes()).decode()}
+
+
+def unpack_ints(obj) -> np.ndarray:
+    return np.frombuffer(base64.b64decode(obj["i64"]), "<i8").astype(
+        np.int64)
+
+
+def pack_floats(a) -> dict:
+    """float64 (not 32) — rank reconstruction in ``explain`` must sort
+    the exact values the policy sorted, or near-ties could flip."""
+    v = np.ascontiguousarray(np.asarray(a, np.float64).ravel())
+    return {"f64": base64.b64encode(v.astype("<f8").tobytes()).decode()}
+
+
+def unpack_floats(obj) -> np.ndarray:
+    return np.frombuffer(base64.b64decode(obj["f64"]), "<f8").astype(
+        np.float64)
+
+
+def _sane(obj):
+    """JSON-encodable copy: numpy scalars/arrays -> python, non-finite
+    floats -> None (strict JSON)."""
+    if isinstance(obj, dict):
+        return {str(k): _sane(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_sane(v) for v in obj]
+    if isinstance(obj, np.ndarray):
+        return [_sane(v) for v in obj.tolist()]
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (float, np.floating)):
+        f = float(obj)
+        return f if f == f and abs(f) != float("inf") else None
+    if isinstance(obj, (np.bool_,)):
+        return bool(obj)
+    return obj
+
+
+# ---------------------------------------------------------------------------
+# the recorder
+
+
+class FlightRecorder:
+    """In-memory record list, optionally streamed to a JSONL file.
+
+    ``record(kind, **fields)`` appends ``{"type": kind, **fields}``;
+    with a path, the line is written and flushed immediately (append
+    mode, so a resumed run extends the same file — the reader's
+    last-record-wins dedup per ``(type, round)`` handles re-executed
+    rounds).
+    """
+
+    enabled = True
+
+    def __init__(self, path: str | None = None):
+        self.records: list[dict] = []
+        self.path = path
+        self._f = open(path, "a") if path else None
+        if self._f is not None and self._f.tell() == 0:
+            self._write({"type": "header", "schema": SCHEMA})
+
+    def _write(self, rec: dict) -> None:
+        self._f.write(json.dumps(rec, separators=(",", ":"),
+                                 allow_nan=False) + "\n")
+        self._f.flush()
+
+    def record(self, _type: str, **fields) -> dict:
+        rec = {"type": _type}
+        rec.update(_sane(fields))
+        self.records.append(rec)
+        if self._f is not None:
+            self._write(rec)
+        return rec
+
+    def close(self) -> None:
+        if self._f is not None:
+            self._f.close()
+            self._f = None
+
+
+class NullFlightRecorder:
+    """Disabled recorder: ``enabled`` is False and every hook checks it
+    before building a record — the off-path cost is one attribute
+    read."""
+
+    enabled = False
+    records = ()
+    path = None
+
+    def record(self, _type: str, **fields) -> None:
+        return None
+
+    def close(self) -> None:
+        pass
+
+
+NULL_RECORDER = NullFlightRecorder()
+
+
+def read_flight(path: str) -> list[dict]:
+    """Parse a flight-record JSONL file.  A torn *last* line (crash
+    mid-append) is dropped; a torn line anywhere else is corruption and
+    raises — the same contract as the durable event log's reader."""
+    with open(path) as f:
+        lines = [ln for ln in f.read().splitlines() if ln.strip()]
+    out: list[dict] = []
+    for i, ln in enumerate(lines):
+        try:
+            out.append(json.loads(ln))
+        except json.JSONDecodeError:
+            if i == len(lines) - 1:
+                break
+            raise ValueError(f"{path}: corrupt flight record at line "
+                             f"{i + 1}")
+    return out

@@ -1,0 +1,470 @@
+"""Self-contained HTML fleet dashboard (DESIGN.md §13).
+
+One HTML file, zero dependencies beyond a browser: inline CSS + SVG
+rendered server-side from the metrics snapshot and the flight record.
+Sections:
+
+  * **KPI tiles** — rounds, fleet size, check-ins, sheds, rebuilds;
+  * **latency percentile table** — every histogram metric (p50/p99/p999
+    exact from the bucket rank math), labeled-family children grouped
+    under their base name;
+  * **per-cluster coverage heatmap** — selection fill per (cluster,
+    round) from the flight record: a starved cluster is a pale row;
+  * **SLO / refresh timeline** — one cell per round, status-colored
+    (letter + legend, never color alone): check-in SLO breaches,
+    blocking / slo-kicked / background rebuilds, shed rounds;
+  * **round tracks** — queue depth, check-ins and check-in p99 as small
+    per-round line charts (one axis each).
+
+Colors follow the repo's chart conventions: categorical slot 1 for
+series, the sequential blue ramp for the heatmap, the fixed status
+palette for state, ink tokens for all text; light and dark are both
+first-class (``prefers-color-scheme`` plus a ``data-theme`` override).
+
+Writes are atomic (``export._atomic_write``), so a crash mid-render
+never leaves a torn artifact.
+"""
+from __future__ import annotations
+
+import html as _html
+
+from repro.obs.export import _atomic_write, metrics_records
+from repro.obs.metrics import split_labeled
+
+# -- palette (reference tokens; swap here to re-brand) ----------------------
+
+_CSS = """
+:root {
+  color-scheme: light;
+  --surface: #fcfcfb; --page: #f9f9f7;
+  --ink: #0b0b0b; --ink-2: #52514e; --ink-3: #898781;
+  --grid: #e1e0d9; --axis: #c3c2b7;
+  --border: rgba(11,11,11,0.10);
+  --series-1: #2a78d6;
+  --good: #0ca30c; --warning: #fab219; --serious: #ec835a;
+  --critical: #d03b3b;
+  --heat-0: #cde2fb; --heat-1: #9ec5f4; --heat-2: #6da7ec;
+  --heat-3: #3987e5; --heat-4: #256abf; --heat-5: #184f95;
+  --heat-6: #0d366b;
+}
+@media (prefers-color-scheme: dark) {
+  :root:not([data-theme="light"]) {
+    color-scheme: dark;
+    --surface: #1a1a19; --page: #0d0d0d;
+    --ink: #ffffff; --ink-2: #c3c2b7; --ink-3: #898781;
+    --grid: #2c2c2a; --axis: #383835;
+    --border: rgba(255,255,255,0.10);
+    --series-1: #3987e5;
+  }
+}
+:root[data-theme="dark"] {
+  color-scheme: dark;
+  --surface: #1a1a19; --page: #0d0d0d;
+  --ink: #ffffff; --ink-2: #c3c2b7; --ink-3: #898781;
+  --grid: #2c2c2a; --axis: #383835;
+  --border: rgba(255,255,255,0.10);
+  --series-1: #3987e5;
+}
+* { box-sizing: border-box; }
+body { margin: 0; padding: 24px; background: var(--page);
+       color: var(--ink);
+       font: 14px/1.45 system-ui, -apple-system, "Segoe UI", sans-serif; }
+h1 { font-size: 20px; margin: 0 0 4px; }
+h2 { font-size: 15px; margin: 28px 0 8px; }
+.sub { color: var(--ink-2); margin: 0 0 20px; }
+.card { background: var(--surface); border: 1px solid var(--border);
+        border-radius: 8px; padding: 16px; margin-bottom: 16px; }
+.tiles { display: flex; flex-wrap: wrap; gap: 12px; }
+.tile { background: var(--surface); border: 1px solid var(--border);
+        border-radius: 8px; padding: 12px 16px; min-width: 130px; }
+.tile .v { font-size: 24px; }
+.tile .k { color: var(--ink-2); font-size: 12px; }
+table { border-collapse: collapse; width: 100%; }
+th { text-align: left; color: var(--ink-2); font-weight: 600;
+     border-bottom: 1px solid var(--axis); padding: 4px 10px 4px 0; }
+td { border-bottom: 1px solid var(--grid); padding: 4px 10px 4px 0; }
+td.num, th.num { text-align: right;
+                 font-variant-numeric: tabular-nums; }
+td.dim { color: var(--ink-3); }
+.legend { color: var(--ink-2); font-size: 12px; margin-top: 6px; }
+.legend b { font-weight: 600; }
+svg text { fill: var(--ink-2); font: 11px system-ui, sans-serif; }
+svg .axis { stroke: var(--axis); stroke-width: 1; }
+svg .grid { stroke: var(--grid); stroke-width: 1; }
+svg .line { stroke: var(--series-1); stroke-width: 2; fill: none;
+            stroke-linejoin: round; }
+svg .cell-label { fill: #ffffff; font-size: 10px; }
+"""
+
+_HEAT = ("var(--heat-0)", "var(--heat-1)", "var(--heat-2)",
+         "var(--heat-3)", "var(--heat-4)", "var(--heat-5)",
+         "var(--heat-6)")
+
+# status of a round in the timeline strip, worst-first; every entry is
+# (key, letter, css color var, label) — letter + legend carry the
+# meaning, color never alone
+_TIMELINE = (
+    ("breach", "B", "var(--critical)", "check-in SLO breach"),
+    ("blocking", "K", "var(--serious)", "blocking rebuild"),
+    ("slo", "S", "var(--warning)", "SLO-kicked rebuild"),
+    ("shed", "D", "var(--warning)", "summaries shed"),
+    ("background", "b", "var(--good)", "background rebuild"),
+    ("sync", "s", "var(--good)", "sync rebuild"),
+)
+
+
+def _esc(s) -> str:
+    return _html.escape(str(s), quote=True)
+
+
+def _fmt(v, unit_s: bool = False) -> str:
+    if v is None:
+        return "–"
+    try:
+        f = float(v)
+    except (TypeError, ValueError):
+        return _esc(v)
+    if f != f:
+        return "–"
+    if unit_s:
+        for scale, suffix in ((1.0, "s"), (1e-3, "ms"), (1e-6, "µs")):
+            if abs(f) >= scale:
+                return f"{f / scale:,.2f}{suffix}"
+        return f"{f * 1e9:,.1f}ns" if f else "0"
+    if f == int(f) and abs(f) < 1e15:
+        return f"{int(f):,}"
+    return f"{f:,.4g}"
+
+
+# ---------------------------------------------------------------------------
+# data shaping
+
+
+def _flight_view(flight) -> dict:
+    """Per-round decision tables out of the raw record list, deduped
+    last-wins per (type, round) — resumed runs re-append re-executed
+    rounds."""
+    by: dict[tuple, dict] = {}
+    for rec in flight or []:
+        rnd = rec.get("round")
+        if rec.get("type") == "header" or rnd is None:
+            continue
+        by[(rec["type"], int(rnd))] = rec
+    rounds = sorted({r for (_t, r) in by})
+    view = {"rounds": rounds}
+    for t in ("round", "checkin", "admission", "refresh", "queue"):
+        view[t] = {r: by[(t, r)] for (tt, r) in by if tt == t
+                   for _ in (0,)}
+    return view
+
+
+def _series(view: dict, type_: str, field: str) -> list:
+    return [(r, view[type_][r].get(field)) for r in view["rounds"]
+            if r in view[type_] and view[type_][r].get(field) is not None]
+
+
+# ---------------------------------------------------------------------------
+# SVG pieces
+
+
+def _svg_line(points: list, width: int = 640, height: int = 120,
+              unit_s: bool = False) -> str:
+    """One-series line chart (rounds on x)."""
+    if not points:
+        return "<p class='legend'>no samples</p>"
+    xs = [p[0] for p in points]
+    ys = [float(p[1]) for p in points]
+    x0, x1 = min(xs), max(xs)
+    y1 = max(ys) or 1.0
+    pad_l, pad_b, pad_t = 46, 18, 6
+    w, h = width - pad_l - 8, height - pad_b - pad_t
+
+    def X(x):
+        return pad_l + (w * (x - x0) / (x1 - x0) if x1 > x0 else w / 2)
+
+    def Y(y):
+        return pad_t + h * (1.0 - y / y1)
+
+    pts = " ".join(f"{X(x):.1f},{Y(y):.1f}" for x, y in zip(xs, ys))
+    dots = "".join(
+        f"<circle cx='{X(x):.1f}' cy='{Y(y):.1f}' r='2.5' "
+        f"fill='var(--series-1)'>"
+        f"<title>round {x}: {_fmt(y, unit_s)}</title></circle>"
+        for x, y in zip(xs, ys))
+    return (
+        f"<svg viewBox='0 0 {width} {height}' role='img' "
+        f"style='max-width:{width}px;width:100%'>"
+        f"<line class='grid' x1='{pad_l}' y1='{Y(y1):.1f}' "
+        f"x2='{width - 8}' y2='{Y(y1):.1f}'/>"
+        f"<line class='axis' x1='{pad_l}' y1='{Y(0):.1f}' "
+        f"x2='{width - 8}' y2='{Y(0):.1f}'/>"
+        f"<text x='{pad_l - 6}' y='{Y(y1) + 4:.1f}' "
+        f"text-anchor='end'>{_fmt(y1, unit_s)}</text>"
+        f"<text x='{pad_l - 6}' y='{Y(0) + 4:.1f}' "
+        f"text-anchor='end'>0</text>"
+        f"<text x='{pad_l}' y='{height - 4}'>round {x0}</text>"
+        f"<text x='{width - 8}' y='{height - 4}' "
+        f"text-anchor='end'>round {x1}</text>"
+        f"<polyline class='line' points='{pts}'/>{dots}</svg>")
+
+
+def _svg_heatmap(view: dict) -> str:
+    """Cluster (rows) × round (cols) selection-fill heatmap."""
+    rounds = [r for r in view["rounds"] if r in view["round"]]
+    fills = {r: view["round"][r].get("cluster_fill") for r in rounds}
+    rounds = [r for r in rounds if fills[r]]
+    if not rounds:
+        return "<p class='legend'>no per-cluster fill recorded</p>"
+    k = max(len(fills[r]) for r in rounds)
+    vmax = max((max(fills[r]) for r in rounds), default=0) or 1
+    cw, ch, pad_l, pad_t = 22, 22, 70, 6
+    width = pad_l + cw * len(rounds) + 8
+    height = pad_t + ch * k + 24
+    cells = []
+    for col, r in enumerate(rounds):
+        for row in range(k):
+            v = fills[r][row] if row < len(fills[r]) else 0
+            step = (0 if vmax <= 0
+                    else min(len(_HEAT) - 1,
+                             int(round((len(_HEAT) - 1) * v / vmax))))
+            x, y = pad_l + col * cw, pad_t + row * ch
+            cells.append(
+                f"<rect x='{x}' y='{y}' width='{cw - 2}' "
+                f"height='{ch - 2}' rx='3' fill='{_HEAT[step]}' "
+                f"fill-opacity='{1.0 if v else 0.25}'>"
+                f"<title>cluster {row}, round {r}: {v} selected"
+                f"</title></rect>")
+            if v:
+                # dark numerals on the two lightest ramp steps — white
+                # text fails contrast there
+                ink = "fill='#0b0b0b'" if step < 2 else ""
+                cells.append(
+                    f"<text class='cell-label' x='{x + (cw - 2) / 2}' "
+                    f"y='{y + ch / 2 + 3}' text-anchor='middle' {ink}>"
+                    f"{v}</text>")
+    labels = "".join(
+        f"<text x='{pad_l - 6}' y='{pad_t + r * ch + ch / 2 + 3}' "
+        f"text-anchor='end'>cluster {r}</text>" for r in range(k))
+    xticks = "".join(
+        f"<text x='{pad_l + c * cw + cw / 2 - 1}' y='{height - 8}' "
+        f"text-anchor='middle'>{r}</text>"
+        for c, r in enumerate(rounds)
+        if len(rounds) <= 20 or c % max(1, len(rounds) // 16) == 0)
+    return (f"<svg viewBox='0 0 {width} {height}' role='img' "
+            f"style='max-width:{width}px;width:100%'>"
+            f"{''.join(cells)}{labels}{xticks}</svg>"
+            f"<p class='legend'>cells: clients selected from each "
+            f"cluster per round (darker = more; max {vmax}); pale rows "
+            f"are starved clusters</p>")
+
+
+def _round_status(view: dict, rnd: int) -> list:
+    out = []
+    ck = view["checkin"].get(rnd)
+    if ck and ck.get("breached"):
+        out.append("breach")
+    ref = view["refresh"].get(rnd)
+    if ref:
+        out.append(ref.get("kind"))
+    adm = view["admission"].get(rnd)
+    if adm and adm.get("shed"):
+        out.append("shed")
+    return out
+
+
+def _svg_timeline(view: dict) -> str:
+    rounds = view["rounds"]
+    if not rounds:
+        return "<p class='legend'>no flight records</p>"
+    cw, ch, pad_l = 22, 24, 70
+    width = pad_l + cw * len(rounds) + 8
+    height = ch + 28
+    cells, used = [], set()
+    for col, r in enumerate(rounds):
+        events = _round_status(view, r)
+        entry = next((t for t in _TIMELINE if t[0] in events), None)
+        x = pad_l + col * cw
+        if entry is None:
+            cells.append(
+                f"<rect x='{x}' y='4' width='{cw - 2}' height='{ch - 2}'"
+                f" rx='3' fill='var(--grid)'>"
+                f"<title>round {r}: steady</title></rect>")
+            continue
+        key, letter, color, label = entry
+        used.add(entry)
+        titles = ", ".join(
+            next(t[3] for t in _TIMELINE if t[0] == e)
+            for e in dict.fromkeys(events) if any(t[0] == e
+                                                  for t in _TIMELINE))
+        cells.append(
+            f"<rect x='{x}' y='4' width='{cw - 2}' height='{ch - 2}' "
+            f"rx='3' fill='{color}'><title>round {r}: {titles}</title>"
+            f"</rect>"
+            f"<text class='cell-label' x='{x + (cw - 2) / 2}' "
+            f"y='{4 + ch / 2 + 3}' text-anchor='middle'>{letter}</text>")
+    xticks = "".join(
+        f"<text x='{pad_l + c * cw + cw / 2 - 1}' y='{height - 6}' "
+        f"text-anchor='middle'>{r}</text>"
+        for c, r in enumerate(rounds)
+        if len(rounds) <= 20 or c % max(1, len(rounds) // 16) == 0)
+    legend = " · ".join(f"<b>{letter}</b> {label}"
+                        for _k, letter, _c, label in _TIMELINE
+                        if (_k, letter, _c, label) in used)
+    return (f"<svg viewBox='0 0 {width} {height}' role='img' "
+            f"style='max-width:{width}px;width:100%'>"
+            f"<text x='{pad_l - 6}' y='{4 + ch / 2 + 3}' "
+            f"text-anchor='end'>rounds</text>{''.join(cells)}{xticks}"
+            f"</svg><p class='legend'>{legend or 'all rounds steady'}"
+            f"</p>")
+
+
+# ---------------------------------------------------------------------------
+# tables
+
+
+def _percentile_table(records: list) -> str:
+    hists = [r for r in records if r.get("kind") == "histogram"
+             and r.get("count")]
+    if not hists:
+        return "<p class='legend'>no histogram metrics</p>"
+    rows = []
+    for r in sorted(hists, key=lambda r: r["name"]):
+        base, labels = split_labeled(r["name"])
+        unit_s = base.endswith("_s")
+        name = (_esc(base) if labels is None else
+                f"{_esc(base)} <span class='dim'>"
+                + _esc(",".join(f"{k}={v}" for k, v in labels.items()))
+                + "</span>")
+        rows.append(
+            "<tr><td>" + name + "</td>"
+            + f"<td class='num'>{_fmt(r.get('count'))}</td>"
+            + "".join(f"<td class='num'>{_fmt(r.get(q), unit_s)}</td>"
+                      for q in ("mean", "p50", "p99", "p999", "max"))
+            + "</tr>")
+    return ("<table><thead><tr><th>histogram</th>"
+            "<th class='num'>count</th><th class='num'>mean</th>"
+            "<th class='num'>p50</th><th class='num'>p99</th>"
+            "<th class='num'>p999</th><th class='num'>max</th>"
+            "</tr></thead><tbody>" + "".join(rows) + "</tbody></table>")
+
+
+def _counter_table(records: list) -> str:
+    rows = []
+    for r in sorted(records, key=lambda r: r["name"]):
+        if r.get("kind") == "counter":
+            val = _fmt(r.get("value"))
+        elif r.get("kind") == "gauge":
+            val = f"{_fmt(r.get('value'))} (max {_fmt(r.get('max'))})"
+        else:
+            continue
+        rows.append(f"<tr><td>{_esc(r['name'])}</td>"
+                    f"<td class='dim'>{_esc(r['kind'])}</td>"
+                    f"<td class='num'>{val}</td></tr>")
+    if not rows:
+        return "<p class='legend'>no counters/gauges</p>"
+    return ("<table><thead><tr><th>metric</th><th>kind</th>"
+            "<th class='num'>value</th></tr></thead><tbody>"
+            + "".join(rows) + "</tbody></table>")
+
+
+def _tiles(view: dict, records: list) -> str:
+    by_name = {r["name"]: r for r in records}
+
+    def metric(name, field="value"):
+        return by_name.get(name, {}).get(field)
+
+    rounds = view["rounds"]
+    n_sel = sum(len(view["round"][r].get("selected") or ())
+                for r in rounds if r in view["round"])
+    tiles = [
+        ("rounds", len([r for r in rounds if r in view["round"]]) or
+         len(rounds)),
+        ("selections", n_sel or None),
+        ("check-ins", metric("frontend/checkins")),
+        ("shed", metric("frontend/shed")),
+        ("SLO breaches", metric("frontend/slo_breaches")),
+        ("blocking rebuilds", metric("server/refresh/blocking")),
+        ("background rebuilds", metric("server/refresh/background")),
+    ]
+    out = "".join(
+        f"<div class='tile'><div class='v'>{_fmt(v)}</div>"
+        f"<div class='k'>{_esc(k)}</div></div>"
+        for k, v in tiles if v is not None)
+    return f"<div class='tiles'>{out}</div>" if out else ""
+
+
+# ---------------------------------------------------------------------------
+# entry point
+
+
+def render(metrics=None, flight=None, title: str = "Fleet dashboard"
+           ) -> str:
+    """The dashboard HTML as a string.  ``metrics`` is a
+    ``MetricRegistry`` or a list of metrics-JSONL records; ``flight``
+    is a list of flight records (as read by ``recorder.read_flight``)."""
+    if metrics is None:
+        records = []
+    elif isinstance(metrics, list):
+        records = metrics
+    else:
+        records = metrics_records(metrics)
+    view = _flight_view(flight)
+
+    depth = _series(view, "queue", "in_flight")
+    checkins = _series(view, "checkin", "checkins")
+    p99 = _series(view, "checkin", "p99_s")
+
+    sections = [
+        _tiles(view, records),
+        "<div class='card'><h2>SLO / refresh timeline</h2>"
+        + _svg_timeline(view) + "</div>",
+        "<div class='card'><h2>Per-cluster selection coverage</h2>"
+        + _svg_heatmap(view) + "</div>",
+        "<div class='card'><h2>Latency percentiles</h2>"
+        + _percentile_table(records) + "</div>",
+    ]
+    tracks = []
+    if depth:
+        tracks.append("<h2>Ingest queue depth (batches in flight)</h2>"
+                      + _svg_line(depth))
+    if checkins:
+        tracks.append("<h2>Check-ins per round</h2>"
+                      + _svg_line(checkins))
+    if p99:
+        tracks.append("<h2>Check-in p99 latency</h2>"
+                      + _svg_line(p99, unit_s=True))
+    if tracks:
+        sections.append("<div class='card'>" + "".join(tracks)
+                        + "</div>")
+    sections.append("<div class='card'><h2>Counters &amp; gauges</h2>"
+                    + _counter_table(records) + "</div>")
+
+    n_recs = len([r for r in (flight or [])
+                  if r.get("type") != "header"])
+    return ("<!doctype html><html lang='en'><head><meta charset='utf-8'>"
+            f"<meta name='viewport' content='width=device-width, "
+            f"initial-scale=1'><title>{_esc(title)}</title>"
+            f"<style>{_CSS}</style></head><body>"
+            f"<h1>{_esc(title)}</h1>"
+            f"<p class='sub'>{len(records)} metrics · {n_recs} flight "
+            f"records · self-contained (no external assets)</p>"
+            + "".join(sections) + "</body></html>")
+
+
+def write_report(path: str, metrics=None, flight=None,
+                 metrics_path: str | None = None,
+                 flight_path: str | None = None,
+                 title: str = "Fleet dashboard") -> str:
+    """Render and atomically write the dashboard; returns ``path``.
+    File inputs (``metrics_path``/``flight_path``) are read with the
+    torn-tail-tolerant readers, so a dashboard can always be rebuilt
+    from a crashed run's artifacts."""
+    if metrics is None and metrics_path is not None:
+        from repro.obs.export import read_metrics_jsonl
+        metrics = read_metrics_jsonl(metrics_path)
+    if flight is None and flight_path is not None:
+        from repro.obs.recorder import read_flight
+        flight = read_flight(flight_path)
+    _atomic_write(path, render(metrics=metrics, flight=flight,
+                               title=title))
+    return path

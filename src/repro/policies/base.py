@@ -108,6 +108,14 @@ class PolicyContext:
     label_dists: np.ndarray | None = None
     data_sizes: np.ndarray | None = None
     stats: ClientStats | None = None
+    #: score-component scratchpad for the flight recorder: ``None``
+    #: normally (policies must not pay to fill it); the round loop sets
+    #: it to ``{}`` when the recorder is armed, and policies deposit
+    #: their decision components (quotas, utilities, backfill ids) so
+    #: ``obs/explain.py`` can reconstruct the ranking.  Write-only for
+    #: policies — reading it back for a decision would break the
+    #: recorder-on ≡ recorder-off determinism pin.
+    explain: dict | None = None
 
     def selectable(self) -> np.ndarray:
         """Bool mask of the genuine candidate pool: available ∧ active."""

@@ -43,11 +43,16 @@ class HACCSPolicy(SelectionPolicy):
             chosen.extend(order[:quotas[c]].tolist())
         # backfill: only genuine starvation lands here (quotas already
         # reflect availability) — unclustered clients are the remainder
+        backfilled: list = []
         if len(chosen) < ctx.per_round:
             rest = np.setdiff1d(np.flatnonzero(ok),
                                 np.asarray(chosen, np.int64))
             extra = rest[rank_desc(ctx.speeds[rest])]
-            chosen.extend(extra[:ctx.per_round - len(chosen)].tolist())
+            backfilled = extra[:ctx.per_round - len(chosen)].tolist()
+            chosen.extend(backfilled)
+        if ctx.explain is not None:
+            ctx.explain["quotas"] = [int(q) for q in quotas]
+            ctx.explain["backfilled"] = [int(c) for c in backfilled]
         return np.asarray(chosen[:ctx.per_round], np.int64)
 
 

@@ -66,8 +66,12 @@ class OortPolicy(SelectionPolicy):
         if k == 0:
             return np.zeros(0, np.int64)
         if ctx.stats is None:             # no history at all: pure explore
-            return np.asarray(ctx.rng.choice(pool, size=k, replace=False),
-                              np.int64)
+            chosen = np.asarray(ctx.rng.choice(pool, size=k, replace=False),
+                                np.int64)
+            if ctx.explain is not None:
+                ctx.explain["explored"] = [int(c) for c in chosen]
+                ctx.explain["epsilon"] = 1.0
+            return chosen
         seen = ctx.stats.seen[pool]
         unseen, known = pool[~seen], pool[seen]
         eps = max(self.explore_min,
@@ -76,11 +80,20 @@ class OortPolicy(SelectionPolicy):
         n_exploit = min(k - n_explore, known.size)
         n_explore = min(k - n_exploit, unseen.size)   # top up if known short
         chosen: list = []
+        explored: list = []
         if n_explore:
-            chosen.extend(np.asarray(
+            explored = np.asarray(
                 ctx.rng.choice(unseen, size=n_explore,
-                               replace=False), np.int64).tolist())
+                               replace=False), np.int64).tolist()
+            chosen.extend(explored)
         if n_exploit:
-            order = known[rank_desc(self.utility(ctx, known))]
+            u = self.utility(ctx, known)
+            order = known[rank_desc(u)]
             chosen.extend(order[:n_exploit].tolist())
+            if ctx.explain is not None:
+                ctx.explain["utility"] = {
+                    int(c): float(v) for c, v in zip(known, u)}
+        if ctx.explain is not None:
+            ctx.explain["explored"] = [int(c) for c in explored]
+            ctx.explain["epsilon"] = float(eps)
         return np.asarray(chosen, np.int64)

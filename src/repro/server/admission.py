@@ -175,14 +175,35 @@ class AdmissionController:
         self.admitted_total += len(admitted)
         self.shed_total += len(shed)
         self.deferred_served_total += deferred_served
+        shed_priority = ([c for c in shed if c in priority_ids]
+                         if shed else [])
         if self.metrics is not None:
             self.metrics.counter("frontend/admitted").inc(len(admitted))
             if shed:
                 self.metrics.counter("frontend/shed").inc(len(shed))
+                # per-lane shed drill-down: backpressure is *supposed*
+                # to shed the routine lane first — a growing priority
+                # stream here means drifted data is being dropped
+                fam = self.metrics.family("frontend/shed_lane",
+                                          labels=("lane",))
+                if shed_priority:
+                    fam.labeled("priority").inc(len(shed_priority))
+                if len(shed) - len(shed_priority):
+                    fam.labeled("normal").inc(
+                        len(shed) - len(shed_priority))
             if deferred_served:
                 self.metrics.counter("frontend/deferred_served").inc(
                     deferred_served)
             self.metrics.gauge("frontend/queue_depth").set(ingest_q.depth())
+        rec = obs.recorder()
+        if rec.enabled:
+            rec.record("admission", round=rnd, admitted=len(admitted),
+                       shed=list(shed), shed_priority=shed_priority,
+                       deferred_served=deferred_served,
+                       deferred_pending=len(self._deferred),
+                       retry_after=self.retry_after,
+                       queue_depth=int(ingest_q.depth()),
+                       capacity=int(capacity))
         if shed:
             obs.instant("admission/shed", cat="frontend", round=rnd,
                         shed=len(shed), retry_after=self.retry_after)

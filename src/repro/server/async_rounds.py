@@ -103,10 +103,19 @@ def drive_async(ctx, session=None, faults=None, start_round: int = 0,
         if cfg.frontend != "none":
             arrivals, frontend, admission = build_frontend(ctx)
     state: dict[int, dict] = {}   # per-round pipeline state, keyed by round
+    # per-client tier labels for the front end's per-tier latency
+    # dimension (fixed for a scenario's lifetime, so resolved once)
+    tier_names = getattr(ctx.scenario, "tier_names", None)
 
     def schedule_round(rnd: int) -> None:
         obs.counter_sample("event_queue_depth", len(queue))
         obs.counter_sample("ingest_in_flight", len(ingest_q))
+        rec = obs.recorder()
+        if rec.enabled:
+            # queue-depth track for the fleet dashboard — event counts
+            # only, so the record is deterministic per seed
+            rec.record("queue", round=rnd, events=len(queue),
+                       in_flight=len(ingest_q))
         queue.push(rnd, Stage.MEMBERSHIP, "membership", rnd)
         queue.push(rnd, Stage.DRAIN, "drain", rnd)
         queue.push(rnd, Stage.SCAN, "scan", rnd)
@@ -221,7 +230,7 @@ def drive_async(ctx, session=None, faults=None, start_round: int = 0,
         stall = (cfg.checkin_stall_model_s if st["blocking"] > 0.0
                  else 0.0)
         report = frontend.serve(sched, store.latest(), st["plan"].active,
-                                stall_s=stall)
+                                stall_s=stall, tiers=tier_names)
         st["checkin"] = report
         if report.slo_breached:
             refresher.request_early_rebuild()

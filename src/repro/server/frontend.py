@@ -95,13 +95,19 @@ class CheckinFrontend:
         return dep
 
     def serve(self, schedule: ArrivalSchedule, snap: RegistrySnapshot,
-              active: np.ndarray, stall_s: float = 0.0) -> CheckinReport:
+              active: np.ndarray, stall_s: float = 0.0,
+              tiers=None) -> CheckinReport:
         """Answer one round's check-in stream from ``snap``.
 
         Each decision is the O(1) snapshot gather selection itself
         performs — cluster id + has-summary eligibility — so the front
         end answers exactly what the selector would, at the snapshot's
-        (bounded) staleness."""
+        (bounded) staleness.  ``tiers`` (optional, a per-client array of
+        device-tier names) turns on the per-tier latency drill-down —
+        one labeled histogram stream per tier, so "which device tier
+        eats the p99" is answerable after the fact.  The default
+        ``None`` keeps the serve path exactly as before (the 1M-arrival
+        benchmark pays nothing for the dimension it doesn't ask for)."""
         m = len(schedule)
         rnd = schedule.round_idx
         if m == 0:
@@ -129,6 +135,20 @@ class CheckinFrontend:
             self.metrics.gauge("frontend/round_p99_s").set(p99)
             if breached:
                 self.metrics.counter("frontend/slo_breaches").inc()
+            if tiers is not None:
+                fam = self.metrics.family("frontend/tier_latency_s",
+                                          labels=("tier",),
+                                          kind="histogram")
+                t = np.asarray(tiers)[schedule.clients]
+                for name in np.unique(t):
+                    fam.labeled(str(name)).record_many(lat[t == name])
+        rec = obs.recorder()
+        if rec.enabled:
+            rec.record("checkin", round=rnd, checkins=m,
+                       eligible=int(eligible.sum()), p50_s=p50,
+                       p99_s=p99, p999_s=p999, breached=bool(breached),
+                       snapshot_version=int(snap.version),
+                       stall_s=float(stall_s))
         obs.instant("frontend/round", cat="frontend", round=rnd,
                     checkins=m, p99_s=p99, snapshot_version=snap.version)
         return CheckinReport(rnd, m, int(eligible.sum()), p50, p99, p999,

@@ -142,6 +142,13 @@ class ClusterRefresher:
                                              ctx.sync_drifted(plan, stale))
                 self.blocking_builds += 1
                 m.counter("server/refresh/sync_builds").inc()
+                m.family("server/refresh/builds",
+                         labels=("kind",)).labeled("sync").inc()
+                rec = obs.recorder()
+                if rec.enabled:
+                    rec.record("refresh", round=rnd, kind="sync",
+                               n_stale=len(stale),
+                               version=self._version + 1)
             # republish every round: selection must read exactly the live
             # registry/clustering state, as the sync loop does
             self._version += 1
@@ -167,6 +174,13 @@ class ClusterRefresher:
             self._slo_rebuild = False      # any rebuild satisfies the ask
             m.counter("server/refresh/blocking").inc()
             m.histogram("server/refresh/blocking_build_s").record(dt)
+            m.family("server/refresh/builds",
+                     labels=("kind",)).labeled("blocking").inc()
+            rec = obs.recorder()
+            if rec.enabled:
+                rec.record("refresh", round=rnd, kind="blocking",
+                           age=int(age), drift_mass=float(mass),
+                           version=snap.version)
             return dt, None
         slo_kick = self._slo_rebuild and len(self._pending_ids) > 0
         if mass >= self.policy.drift_mass_trigger or slo_kick:
@@ -176,11 +190,20 @@ class ClusterRefresher:
                 snap, dt = self._build(rnd, plan, mass, drifted)
             self.background_builds += 1
             self.background_s += dt
-            if slo_kick and mass < self.policy.drift_mass_trigger:
+            slo_only = slo_kick and mass < self.policy.drift_mass_trigger
+            if slo_only:
                 self.slo_builds += 1
                 m.counter("server/refresh/slo_builds").inc()
             self._slo_rebuild = False
             m.counter("server/refresh/background").inc()
             m.histogram("server/refresh/background_build_s").record(dt)
+            m.family("server/refresh/builds", labels=("kind",)).labeled(
+                "slo" if slo_only else "background").inc()
+            rec = obs.recorder()
+            if rec.enabled:
+                rec.record("refresh", round=rnd,
+                           kind="slo" if slo_only else "background",
+                           age=int(age), drift_mass=float(mass),
+                           version=snap.version)
             return 0.0, snap
         return 0.0, None

@@ -110,12 +110,17 @@ class ShardedSummaryRegistry(StreamingSummaryRegistry):
         pad_p = pad_q = None
         observed = obs.enabled()
         t_scan = time.perf_counter() if observed else 0.0
+        chunk_fam = (obs.metrics().family("shard/scan_chunk_s",
+                                          labels=("chunk",),
+                                          kind="histogram")
+                     if observed else None)
         with obs.kernel_span("drift_scan", rows=n, classes=c,
                              n_shards=self.n_shards,
                              chunk_rows=rows) as sp:
             for start in range(0, n, rows):
                 stop = min(start + rows, n)
                 m = stop - start
+                t_chunk = time.perf_counter() if observed else 0.0
                 if m == rows:
                     d = scan(self.label_dists[start:stop], fresh[start:stop])
                 else:                       # tail chunk: zero-pad to shape
@@ -126,6 +131,12 @@ class ShardedSummaryRegistry(StreamingSummaryRegistry):
                     pad_q[:m] = fresh[start:stop]
                     d = scan(pad_p, pad_q)
                 out[start:stop] = np.asarray(d)[:m]
+                if chunk_fam is not None:
+                    # per-chunk scan time: a straggling shard region
+                    # (page-cache miss, NUMA imbalance) shows up as one
+                    # labeled stream, not a blur in the whole-scan mean
+                    chunk_fam.labeled(start // rows).record(
+                        time.perf_counter() - t_chunk)
                 self.scan_chunks += 1
             sp.annotate(chunks=-(-n // rows))
         if observed:

@@ -175,6 +175,14 @@ class Scenario:
         self._rng = rng
         self._round = 0
 
+    @property
+    def tier_names(self) -> np.ndarray:
+        """Per-client device-tier name (``tier_of`` resolved through the
+        profile list) — the label array the per-tier observability
+        dimensions group by."""
+        names = np.asarray([p.name for p in self._profiles])
+        return names[self.tier_of]
+
     # ------------------------------------------------------------------
 
     def _drift_at(self, rnd: int) -> np.ndarray:

@@ -4,6 +4,7 @@ refresher staleness-bound edges the new metrics make checkable.
 """
 import json
 import math
+import os
 
 import numpy as np
 import pytest
@@ -449,3 +450,163 @@ def test_blocking_counter_increments_exactly_at_the_bound():
     assert refresher.background_builds == 1
     assert ctx.metrics.histogram(
         "server/refresh/background_build_s").count == 1
+
+
+# ---------------------------------------------------------------------------
+# dimensional metrics: labeled instrument families (DESIGN.md §13)
+
+
+def test_empty_histogram_percentiles_are_nan():
+    h = Histogram("empty_s")
+    assert h.count == 0
+    for q in (0.0, 50.0, 99.0, 99.9, 100.0):
+        assert math.isnan(h.percentile(q))
+    assert all(math.isnan(v) for v in h.percentiles().values())
+    snap = h.snapshot()
+    assert snap["count"] == 0
+
+
+def test_family_children_land_in_the_registry():
+    from repro.obs.metrics import labeled_name, split_labeled
+    r = MetricRegistry()
+    fam = r.family("select/fill", labels=("cluster",))
+    fam.labeled(0).inc(3)
+    fam.labeled(2).inc(1)
+    # children are plain registry instruments under canonical names
+    name = labeled_name("select/fill", ("cluster",), (0,))
+    assert name == "select/fill{cluster=0}"
+    assert r.counter(name).value == 3
+    assert split_labeled(name) == ("select/fill", {"cluster": "0"})
+    assert split_labeled("plain") == ("plain", None)
+    # same child object back on every call (cache hit is the hot path)
+    assert fam.labeled(0) is fam.labeled(0)
+    assert set(fam.children()) == {(0,), (2,)}
+
+
+def test_family_validates_label_arity_and_reserved_chars():
+    r = MetricRegistry()
+    fam = r.family("f", labels=("a", "b"))
+    with pytest.raises(ValueError, match="got 1 value"):
+        fam.labeled("x")
+    with pytest.raises(ValueError, match="reserved"):
+        fam.labeled("x", "y=z")
+    with pytest.raises(ValueError):
+        r.family("bad{name", labels=("a",))
+    # re-declaring with different labels or kind fails loudly
+    with pytest.raises(ValueError, match="has labels"):
+        r.family("f", labels=("a",))
+    with pytest.raises(TypeError, match="family"):
+        r.family("f", labels=("a", "b"), kind="histogram")
+
+
+def test_family_and_plain_name_collision_raises():
+    r = MetricRegistry()
+    r.family("x", labels=("k",))
+    with pytest.raises(TypeError, match="family"):
+        r.counter("x")
+    r2 = MetricRegistry()
+    r2.counter("y")
+    with pytest.raises(TypeError, match="plain"):
+        r2.family("y", labels=("k",))
+
+
+def test_labeled_family_merge_is_union_of_streams():
+    rs = np.random.RandomState(7)
+    a, b, u = MetricRegistry(), MetricRegistry(), MetricRegistry()
+    fa = a.family("lat_s", labels=("tier",), kind="histogram")
+    fb = b.family("lat_s", labels=("tier",), kind="histogram")
+    fu = u.family("lat_s", labels=("tier",), kind="histogram")
+    for tier, n, reg_fam in (("phone", 200, fa), ("tablet", 150, fa),
+                             ("phone", 100, fb), ("edge", 50, fb)):
+        for v in rs.gamma(2.0, 1e-3, n):
+            reg_fam.labeled(tier).record(v)
+            fu.labeled(tier).record(v)
+    a.merge(b)
+    # merged children == histograms of the concatenated per-tier streams
+    for tier in ("phone", "tablet", "edge"):
+        got = a.histogram(f"lat_s{{tier={tier}}}")
+        want = u.histogram(f"lat_s{{tier={tier}}}")
+        assert got.counts == want.counts and got.count == want.count
+        assert got.percentiles() == want.percentiles()
+    # family metadata adopted on merge into a fresh registry
+    c = MetricRegistry()
+    c.merge(a)
+    assert c.histogram("lat_s{tier=edge}").count == 50
+    assert "lat_s" in c.families()
+
+
+def test_family_merge_mismatched_labels_or_kind_raises():
+    a, b = MetricRegistry(), MetricRegistry()
+    a.family("f", labels=("x",)).labeled(1).inc()
+    b.family("f", labels=("y",)).labeled(1).inc()
+    with pytest.raises(ValueError, match="label"):
+        a.merge(b)
+    c, d = MetricRegistry(), MetricRegistry()
+    c.family("g", labels=("x",)).labeled(1).inc()
+    d.family("g", labels=("x",), kind="histogram").labeled(1).record(1.0)
+    with pytest.raises(TypeError):
+        c.merge(d)
+
+
+def test_null_registry_family_noops():
+    fam = NULL_REGISTRY.family("x", labels=("k",))
+    fam.labeled("a").inc()
+    fam.labeled("a").record(1.0)
+    fam.labeled("a").set(2.0)
+    assert NULL_REGISTRY.snapshot() == {}
+
+
+# ---------------------------------------------------------------------------
+# atomic artifact writes + torn-tail tolerance (satellite)
+
+
+def test_metrics_export_is_atomic(tmp_path, monkeypatch):
+    import repro.obs.export as export
+    r = MetricRegistry()
+    r.counter("c").inc(5)
+    path = str(tmp_path / "m.jsonl")
+    write_metrics_jsonl(r, path)
+    assert not os.path.exists(path + ".tmp")   # replaced, not left behind
+    first = open(path).read()
+
+    # a crash mid-write must not clobber the previous artifact
+    real_replace = os.replace
+
+    def boom(src, dst):
+        raise RuntimeError("killed mid-write")
+
+    monkeypatch.setattr(export.os, "replace", boom)
+    r.counter("c").inc(1)
+    with pytest.raises(RuntimeError):
+        write_metrics_jsonl(r, path)
+    monkeypatch.setattr(export.os, "replace", real_replace)
+    assert open(path).read() == first          # old artifact intact
+
+
+def test_read_metrics_jsonl_tolerates_torn_tail(tmp_path):
+    r = MetricRegistry()
+    r.counter("a").inc(1)
+    r.counter("b").inc(2)
+    path = str(tmp_path / "m.jsonl")
+    write_metrics_jsonl(r, path)
+    body = open(path).read()
+    # torn last line (crash mid-append): dropped, rest parses
+    open(path, "w").write(body + '{"name": "c", "val')
+    recs = {rec["name"] for rec in read_metrics_jsonl(path)}
+    assert recs == {"a", "b"}
+    # torn line in the middle: corruption, raises
+    lines = body.splitlines()
+    open(path, "w").write(lines[0][: len(lines[0]) // 2] + "\n"
+                          + "\n".join(lines[1:]) + "\n")
+    with pytest.raises(ValueError, match="corrupt"):
+        read_metrics_jsonl(path)
+
+
+def test_metrics_records_annotate_labeled_children():
+    r = MetricRegistry()
+    r.family("fill", labels=("cluster",)).labeled(3).inc(2)
+    r.counter("plain").inc()
+    recs = {rec["name"]: rec for rec in metrics_records(r)}
+    assert recs["fill{cluster=3}"]["family"] == "fill"
+    assert recs["fill{cluster=3}"]["labels"] == {"cluster": "3"}
+    assert "family" not in recs["plain"]
